@@ -1,0 +1,38 @@
+"""Paper Table I / §VII-A analogue: MSF over the graph-family suite with
+correctness, iteration counts, and throughput (directed edges/s)."""
+from __future__ import annotations
+
+from benchmarks.common import row, timeit
+from repro.core.connectivity import connected_components
+from repro.core.msf import msf
+from repro.graphs import grid_road_graph, random_graph, rmat_graph
+from repro.graphs.generators import components_graph
+from repro.graphs.structures import nx_free_msf_weight, nx_free_n_components
+
+
+def run_rows():
+    suite = {
+        "social_rmat_s15_e16": rmat_graph(15, 16, seed=2),
+        "road_grid_250": grid_road_graph(250, 250, seed=3),
+        "uniform_1e5": random_graph(1 << 16, 1 << 19, seed=4),
+        "components_16x4k": components_graph(16, 4096, seed=5),
+    }
+    out = []
+    for nm, g in suite.items():
+        oracle = nx_free_msf_weight(g)
+        r = msf(g)
+        assert abs(float(r.weight) - oracle) < max(1.0, 1e-6 * oracle), nm
+        t = timeit(lambda: msf(g), iters=2)
+        meps = g.num_directed_edges / t / 1e6
+        out.append(row(f"table1_msf_{nm}", t * 1e6,
+                       f"iters={int(r.iterations)};Medges_per_s={meps:.1f}"))
+        cc = connected_components(g)
+        assert int(cc.n_components) == nx_free_n_components(g), nm
+        t2 = timeit(lambda: connected_components(g), iters=2)
+        out.append(row(f"table1_cc_{nm}", t2 * 1e6,
+                       f"ncc={int(cc.n_components)};iters={int(cc.iterations)}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run_rows()))

@@ -1,0 +1,31 @@
+"""Paper Fig 7: edge weak scaling on uniform random graphs (n²/p constant).
+
+Single-device proxy: time-per-iteration as the local problem grows with the
+paper's n ∝ √p law, plus sparsity sensitivity (f = 100·m/n² as in Fig 7).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, timeit
+from repro.core.msf import msf
+from repro.graphs import random_graph
+
+
+def run_rows():
+    out = []
+    n0 = 1 << 14
+    for pp in [1, 4, 16]:  # n grows like n0·√p (n²/p const)
+        n = int(n0 * pp ** 0.5)
+        for sp in [0.01, 0.05]:  # edge percentage f
+            m = int(sp / 100 * n * n)
+            g = random_graph(n, max(m, n), seed=pp)
+            r = msf(g)
+            t = timeit(lambda: msf(g), iters=2)
+            out.append(row(
+                f"fig7_weak_p{pp}_sp{sp}", t * 1e6,
+                f"n={n};m={g.num_directed_edges // 2};iters={int(r.iterations)}",
+            ))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run_rows()))

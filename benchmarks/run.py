@@ -1,0 +1,35 @@
+"""Benchmark driver — one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows (benchmarks/bench_*.py each map to a
+paper figure; the roofline/§Perf numbers come from launch/dryrun.py)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_graph_suite,
+        bench_multilinear,
+        bench_shortcut,
+        bench_strong_scaling,
+        bench_weak_scaling,
+    )
+
+    mods = [
+        ("fig3/4-shortcut", bench_shortcut),
+        ("fig5/6-strong-scaling", bench_strong_scaling),
+        ("fig7-weak-scaling", bench_weak_scaling),
+        ("fig8-multilinear-vs-pairwise", bench_multilinear),
+        ("table1-graph-suite", bench_graph_suite),
+    ]
+    print("name,us_per_call,derived")
+    for label, mod in mods:
+        t0 = time.time()
+        for r in mod.run_rows():
+            print(r, flush=True)
+        print(f"# {label} done in {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Batched serving (prefill + greedy decode with KV cache) — thin wrapper
+over the production serving path.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve",
+     "--arch", "mixtral-8x7b", "--batch", "4", "--prompt-len", "32",
+     "--tokens", "12"],
+    check=True,
+)

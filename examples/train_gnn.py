@@ -1,0 +1,56 @@
+"""Train GAT on a planted node-classification task (Cora-shaped) until the
+accuracy beats the feature-only baseline — exercises the shared
+message-passing substrate (the paper's multilinear form with ⊕ = softmax-
+weighted sum).
+
+  PYTHONPATH=src python examples/train_gnn.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data.pipeline import make_planted_graph_task
+from repro.models import gnn as G
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.train import steps as S
+
+cfg = dataclasses.replace(
+    registry.get_config("gat-cora", smoke=True), d_in=32, n_classes=4,
+    d_hidden=16, n_heads=4,
+)
+task = make_planted_graph_task(n=400, m=2000, d_feat=32, n_classes=4, seed=0)
+batch = dict(
+    x=jnp.asarray(task["x"]),
+    src=jnp.asarray(task["src"]),
+    dst=jnp.asarray(task["dst"]),
+    edge_valid=jnp.asarray(task["edge_valid"]),
+    labels=jnp.asarray(task["labels"]),
+    node_mask=jnp.ones(400, jnp.float32),
+)
+params = G.init_gat(jax.random.key(0), cfg)
+opt = adamw_init(params)
+
+
+@jax.jit
+def step(params, opt, batch):
+    loss, grads = jax.value_and_grad(S.gnn_loss)(params, batch, cfg, 1)
+    params, opt, _ = adamw_update(grads, opt, params, jnp.float32(5e-3))
+    return params, opt, loss
+
+
+def acc(params):
+    logits = S.gnn_apply(params, batch, cfg, 1)
+    return float((jnp.argmax(logits, -1) == batch["labels"]).mean())
+
+
+print(f"initial accuracy: {acc(params):.3f} (chance = 0.25)")
+for i in range(300):
+    params, opt, loss = step(params, opt, batch)
+    if i % 50 == 0:
+        print(f"step {i:4d} loss {float(loss):.4f} acc {acc(params):.3f}")
+final = acc(params)
+print(f"final accuracy: {final:.3f}")
+assert final > 0.6, "GAT failed to learn the planted neighborhood structure"

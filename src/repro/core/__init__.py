@@ -1,0 +1,13 @@
+# The paper's primary contribution: the multilinear kernel (§III-A),
+# the algebraic Awerbuch-Shiloach MSF algorithm (§III-B), shortcutting
+# optimizations (§IV-B), and the AS/SV connectivity baseline (§II-D).
+from repro.core.msf import msf, msf_weight, MSFResult, starcheck
+from repro.core.connectivity import connected_components, CCResult
+from repro.core.multilinear import (
+    min_outgoing_coo,
+    min_outgoing_dense,
+    multilinear_coo,
+    project_to_roots,
+)
+from repro.core.semiring import EdgeMin, segment_argmin, axis_argmin, pack32, unpack32
+from repro.core import shortcut

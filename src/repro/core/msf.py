@@ -1,0 +1,183 @@
+"""Algebraic Awerbuch-Shiloach minimum spanning forest (paper Algorithm 1).
+
+Two algorithm variants:
+
+- ``variant="complete"`` (production default, paper §IV-B): complete
+  shortcutting keeps every tree a star at the top of each iteration, so the
+  starcheck disappears and hooking can fuse the line-10 projection into the
+  multilinear kernel (segment ids = p[src] are root ids).
+- ``variant="paper"`` (faithful Algorithm 1): starcheck, per-vertex
+  multilinear kernel (line 9), separate projection to roots (line 10), one
+  shortcut round per iteration (line 15).
+
+Plus the *pairwise* formulation (paper §IV-A "Pairwise") used as the Fig-8
+baseline: first materialize m_ij = (a_ij, p_j) (the nnz extra writes), then
+reduce f(p_i, m_ij) — algebraically identical, strictly more data movement.
+
+Termination uses FastSV's grandparent-convergence condition (paper §V): stop
+when hooking makes no progress, checked on the parent vector after complete
+shortcutting.
+
+Outputs: total MSF weight, the MSF edge set (global eids), parent vector
+(connected-component labels), and iteration count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import shortcut as sc
+from repro.core.multilinear import (
+    min_outgoing_coo,
+    project_to_roots,
+)
+from repro.core.semiring import INF, IMAX
+from repro.graphs.structures import Graph
+
+
+class MSFResult(NamedTuple):
+    weight: jax.Array  # float32 scalar: total MSF weight
+    parent: jax.Array  # int32 [n]: component representative per vertex
+    msf_eids: jax.Array  # int32 [n]: global eids of MSF edges, IMAX padded
+    n_msf_edges: jax.Array  # int32 scalar
+    iterations: jax.Array  # int32 scalar
+
+
+def starcheck(p: jax.Array) -> jax.Array:
+    """AS starcheck (paper §II-C): s_i = does vertex i belong to a star."""
+    n = p.shape[0]
+    i = jnp.arange(n, dtype=p.dtype)
+    gp = p[p]
+    s = jnp.ones(n, bool)
+    nonstar = gp != p
+    # Vertex i informs its grandparent the tree is not a star.
+    tgt = jnp.where(nonstar, gp, n)  # out-of-bounds dropped
+    s = s.at[tgt].set(False, mode="drop")
+    s = s & ~nonstar
+    # Remaining vertices query their parent.
+    return s & s[p]
+
+
+def _hook_and_tiebreak(p, r_w, r_eid, r_parent):
+    """Lines 11-13: hook star roots with their min outgoing edge, then break
+    the 2-cycles hooking introduces (larger root keeps the hook)."""
+    n = p.shape[0]
+    i = jnp.arange(n, dtype=p.dtype)
+    hooked = r_w < INF  # only roots receive a valid r entry
+    p_h = jnp.where(hooked, r_parent, p)
+    # Tie break: i was a (hooked) root, i < p_i, and p_{p_i} == i.
+    t = hooked & (i < p_h) & (p_h[p_h] == i)
+    p_new = jnp.where(t, i, p_h)
+    keep = hooked & ~t  # roots whose hook survives contribute their edge
+    return p_new, keep, t
+
+
+def _record_edges(msf_eids, n_f, keep, r_eid):
+    """Append the surviving hook edges' eids to the MSF buffer."""
+    n = keep.shape[0]
+    pos = n_f + jnp.cumsum(keep.astype(jnp.int32)) - 1
+    tgt = jnp.where(keep, pos, n)  # drop non-winners
+    msf_eids = msf_eids.at[tgt].set(r_eid, mode="drop")
+    return msf_eids, n_f + jnp.sum(keep.astype(jnp.int32))
+
+
+@partial(
+    jax.jit,
+    static_argnames=("variant", "shortcut", "capacity", "max_iters", "unroll_guard"),
+)
+def msf(
+    graph: Graph,
+    *,
+    variant: str = "complete",
+    shortcut: str = "complete",
+    capacity: int = 1 << 16,
+    max_iters: int | None = None,
+    unroll_guard: bool = True,
+) -> MSFResult:
+    """Compute the minimum spanning forest of ``graph``.
+
+    variant: "complete" | "paper" | "pairwise"
+    shortcut (complete variant only): "complete" | "csp" | "os"
+    """
+    n = graph.n
+    src, dst, w, eid, valid = graph.src, graph.dst, graph.w, graph.eid, graph.valid
+    p0 = jnp.arange(n, dtype=jnp.int32)
+    limit = jnp.int32(max_iters if max_iters is not None else 2 * int(n).bit_length() + 8)
+
+    shortcut_fn = sc.make_shortcut_fn(shortcut, capacity) if variant != "paper" else None
+
+    def body_complete(state):
+        p, total, msf_eids, n_f, it, _ = state
+        p_prev = p
+        if variant == "pairwise":
+            # Paper §IV-A pairwise baseline: materialize m = (a_ij, p_j)
+            # into an nnz-sized buffer (the extra writes), then reduce with
+            # f(p_i, m_ij). Algebraically identical to the fused kernel.
+            # ``optimization_barrier`` forces the materialization XLA would
+            # otherwise fuse away — CTF's pairwise path writes the updated
+            # adjacency tensor to memory, which is exactly the cost the
+            # paper's all-at-once kernel removes.
+            m_w, m_pd, m_eid = jax.lax.optimization_barrier(
+                (
+                    jnp.where(valid, w, INF),  # materialized weight field
+                    jnp.where(valid, p[dst], IMAX),  # materialized parents
+                    jnp.where(valid, eid, IMAX),
+                )
+            )
+            ps = p[src]
+            outgoing = (ps != m_pd) & valid
+            from repro.core.semiring import segment_argmin
+
+            r = segment_argmin(m_w, m_eid, (m_pd,), ps, n, valid=outgoing)
+        else:
+            r = min_outgoing_coo(p, src, dst, w, eid, valid, n, segment="root")
+        p_h, keep, _ = _hook_and_tiebreak(p, r.w, r.eid, r.payload[0])
+        total = total + jnp.sum(jnp.where(keep, r.w, 0.0))
+        msf_eids, n_f = _record_edges(msf_eids, n_f, keep, r.eid)
+        p_next = shortcut_fn(p_h, p_prev)
+        done = jnp.all(p_next == p_prev)
+        return p_next, total, msf_eids, n_f, it + 1, done
+
+    def body_paper(state):
+        p, total, msf_eids, n_f, it, _ = state
+        p_prev = p
+        s = starcheck(p)
+        q = min_outgoing_coo(p, src, dst, w, eid, valid, n, segment="vertex", star=s)
+        r = project_to_roots(q, p, n)
+        p_h, keep, _ = _hook_and_tiebreak(p, r.w, r.eid, r.payload[0])
+        total = total + jnp.sum(jnp.where(keep, r.w, 0.0))
+        msf_eids, n_f = _record_edges(msf_eids, n_f, keep, r.eid)
+        s2 = starcheck(p_h)
+        p_next = sc.shortcut_once(p_h, s2)
+        done = jnp.all(p_next == p_prev)
+        return p_next, total, msf_eids, n_f, it + 1, done
+
+    body = body_paper if variant == "paper" else body_complete
+
+    def cond(state):
+        _, _, _, _, it, done = state
+        guard = it < limit if unroll_guard else True
+        return jnp.logical_and(~done, guard)
+
+    init = (
+        p0,
+        jnp.float32(0.0),
+        jnp.full((n,), IMAX, jnp.int32),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.bool_(False),
+    )
+    p, total, msf_eids, n_f, it, _ = jax.lax.while_loop(cond, body, init)
+    if variant != "paper":
+        p = sc.complete_shortcut(p)  # canonical labels (already stars; no-op)
+    else:
+        p = sc.complete_shortcut(p)
+    return MSFResult(weight=total, parent=p, msf_eids=msf_eids, n_msf_edges=n_f, iterations=it)
+
+
+def msf_weight(graph: Graph, **kw) -> float:
+    return float(msf(graph, **kw).weight)

@@ -1,0 +1,38 @@
+"""Algebraic Bellman-Ford SSSP (paper §II-B — the motivating example for
+algebraic graph algorithms): n−1 tropical-semiring SpMVs with early exit
+on convergence. Included for completeness of the algebraic toolkit; uses
+the same COO substrate as the MSF engine."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import tropical_spmv
+from repro.graphs.structures import Graph
+
+INF = jnp.float32(jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def sssp(graph: Graph, source: int, *, max_iters: int | None = None):
+    """Single-source shortest path distances d [n] (inf = unreachable)."""
+    n = graph.n
+    src = graph.src
+    dst = graph.dst
+    w = jnp.where(graph.valid, graph.w, INF)
+    d0 = jnp.full((n,), INF).at[source].set(0.0)
+    limit = jnp.int32(max_iters if max_iters is not None else n - 1)
+
+    def body(state):
+        d, it, _ = state
+        d_new = tropical_spmv(d, src, dst, w, n)
+        return d_new, it + 1, jnp.all(d_new == d)
+
+    def cond(state):
+        _, it, done = state
+        return jnp.logical_and(~done, it < limit)
+
+    d, it, _ = jax.lax.while_loop(cond, body, (d0, jnp.int32(0), jnp.bool_(False)))
+    return d, it

@@ -1,0 +1,6 @@
+from repro.data.pipeline import (
+    LMBatchSource,
+    RecsysBatchSource,
+    MoleculeBatchSource,
+    make_planted_graph_task,
+)

@@ -1,0 +1,7 @@
+from repro.graphs.structures import Graph, from_edges, to_csr
+from repro.graphs.generators import (
+    random_graph,
+    rmat_graph,
+    grid_road_graph,
+    assign_distinct_weights,
+)

@@ -1,0 +1,95 @@
+"""Synthetic graph generators mirroring the paper's evaluation inputs.
+
+- uniform random graphs (paper §VII-C weak scaling),
+- R-MAT graphs (paper §VII-B, S=scale, E=edge factor),
+- 2D grid "road" graphs (high-diameter proxies for road_usa/road_central),
+- integer weights uniform in [1, 255] (paper §VII: "we generate uniformly
+  distributed integers from 1 through 255 as edge weights", consistent with
+  the GAP suite and Graph500 SSSP).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.structures import Graph, from_edges
+
+WEIGHT_LO, WEIGHT_HI = 1, 255
+
+
+def assign_distinct_weights(rng: np.random.Generator, m: int) -> np.ndarray:
+    """Integer weights 1..255; distinctness comes from (w, eid) lex order."""
+    return rng.integers(WEIGHT_LO, WEIGHT_HI + 1, size=m).astype(np.float64)
+
+
+def random_graph(n: int, m: int, seed: int = 0) -> Graph:
+    """Uniform random graph with ~m undirected edges (paper Fig 7 inputs)."""
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, size=m)
+    v = rng.integers(0, n, size=m)
+    w = assign_distinct_weights(rng, m)
+    return from_edges(u, v, w, n)
+
+
+def rmat_graph(
+    scale: int,
+    edge_factor: int,
+    seed: int = 0,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+) -> Graph:
+    """R-MAT generator (Graph500 parameters by default). n = 2**scale."""
+    n = 1 << scale
+    m = n * edge_factor
+    rng = np.random.default_rng(seed)
+    u = np.zeros(m, np.int64)
+    v = np.zeros(m, np.int64)
+    ab = a + b
+    abc = a + b + c
+    for bit in range(scale):
+        r = rng.random(m)
+        right = r >= ab  # bottom half for the row bit
+        r2 = rng.random(m)
+        # Conditional column split given the row choice.
+        col_p = np.where(right, (abc - ab) / (1.0 - ab), a / ab)
+        down = r2 >= col_p
+        u |= right.astype(np.int64) << bit
+        v |= down.astype(np.int64) << bit
+    w = assign_distinct_weights(rng, m)
+    return from_edges(u, v, w, n)
+
+
+def grid_road_graph(rows: int, cols: int, seed: int = 0) -> Graph:
+    """2D grid graph: high diameter, degree ≤ 4 — a road-network proxy."""
+    n = rows * cols
+    idx = np.arange(n).reshape(rows, cols)
+    right_u = idx[:, :-1].ravel()
+    right_v = idx[:, 1:].ravel()
+    down_u = idx[:-1, :].ravel()
+    down_v = idx[1:, :].ravel()
+    u = np.concatenate([right_u, down_u])
+    v = np.concatenate([right_v, down_v])
+    rng = np.random.default_rng(seed)
+    w = assign_distinct_weights(rng, len(u))
+    return from_edges(u, v, w, n)
+
+
+def components_graph(n_components: int, comp_size: int, seed: int = 0) -> Graph:
+    """Disjoint union of random connected components — exercises the *forest*
+    (not tree) case of MSF."""
+    rng = np.random.default_rng(seed)
+    us, vs = [], []
+    for k in range(n_components):
+        base = k * comp_size
+        # random spanning tree + extra edges
+        perm = rng.permutation(comp_size)
+        for i in range(1, comp_size):
+            us.append(base + perm[i])
+            vs.append(base + perm[rng.integers(0, i)])
+        extra = comp_size // 2
+        us.extend(base + rng.integers(0, comp_size, extra))
+        vs.extend(base + rng.integers(0, comp_size, extra))
+    u = np.array(us, np.int64)
+    v = np.array(vs, np.int64)
+    w = assign_distinct_weights(rng, len(u))
+    return from_edges(u, v, w, n_components * comp_size)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: dense-block multilinear MSF kernel (paper §III-A).
+
+Computes, per row i: the MINWEIGHT-monoid reduction
+    (minw, mincol, minpay)_i = argmin_j { (a_ij, j) : p_i != p_j }
+with payload p_j — i.e. Algorithm 1 line 9 with f(p_i, a_ij, p_j).
+
+TPU mapping (DESIGN.md §2): grid = (rows/BI, cols/BJ) with the column
+dimension innermost and *sequential*; the (BI,) running accumulators live in
+the output VMEM blocks, which Pallas revisits for every j because their
+index_map ignores j. Each grid step loads an (BI, BJ) tile of A and the
+(BI,)/(BJ,) slabs of p — a VPU compare/select + min-reduce over lanes, the
+all-at-once form of the kernel (no materialized (a_ij, p_j) pairs, which is
+exactly the paper's complaint about the pairwise SpMV formulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+INF = np.float32(np.inf)
+IMAX = np.int32(np.iinfo(np.int32).max)
+
+
+def _kernel(x_ref, y_ref, a_ref, minw_ref, mincol_ref, minpay_ref, *, block_j):
+    j_blk = pl.program_id(1)
+
+    @pl.when(j_blk == 0)
+    def _init():
+        minw_ref[...] = jnp.full_like(minw_ref, INF)
+        mincol_ref[...] = jnp.full_like(mincol_ref, IMAX)
+        minpay_ref[...] = jnp.full_like(minpay_ref, IMAX)
+
+    x = x_ref[...]  # [BI] int32 (p row slab)
+    y = y_ref[...]  # [BJ] int32 (p col slab)
+    a = a_ref[...]  # [BI, BJ] f32
+    col = j_blk * block_j + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+
+    valid = (x[:, None] != y[None, :]) & (a < INF)
+    w = jnp.where(valid, a, INF)
+    bw = jnp.min(w, axis=1)
+    on = (w == bw[:, None]) & (bw[:, None] < INF)
+    bcol = jnp.min(jnp.where(on, col, IMAX), axis=1)
+    winner = on & (col == bcol[:, None])
+    bpay = jnp.min(
+        jnp.where(winner, jnp.broadcast_to(y[None, :], a.shape).astype(jnp.int32), IMAX),
+        axis=1,
+    )
+
+    # MINWEIGHT combine with the running accumulator (lexicographic (w, col)).
+    cw, ccol, cpay = minw_ref[...], mincol_ref[...], minpay_ref[...]
+    nw = jnp.minimum(cw, bw)
+    c_on = (cw == nw) & (nw < INF)
+    b_on = (bw == nw) & (nw < INF)
+    ncol = jnp.minimum(jnp.where(c_on, ccol, IMAX), jnp.where(b_on, bcol, IMAX))
+    c_win = c_on & (ccol == ncol)
+    b_win = b_on & (bcol == ncol)
+    npay = jnp.minimum(jnp.where(c_win, cpay, IMAX), jnp.where(b_win, bpay, IMAX))
+
+    minw_ref[...] = nw
+    mincol_ref[...] = ncol
+    minpay_ref[...] = npay
+
+
+def multilinear_dense_pallas(
+    p: jax.Array,
+    a: jax.Array,
+    *,
+    block_i: int = 128,
+    block_j: int = 128,
+    interpret: bool = False,
+):
+    """p: int32 [n]; a: f32 [n, n] with +inf for absent edges. n must be a
+    multiple of the block sizes (``ops.multilinear_dense`` pads)."""
+    n = a.shape[0]
+    assert n % block_i == 0 and a.shape[1] % block_j == 0
+    grid = (n // block_i, a.shape[1] // block_j)
+    kernel = functools.partial(_kernel, block_j=block_j)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_i,), lambda i, j: (i,)),
+            pl.BlockSpec((block_j,), lambda i, j: (j,)),
+            pl.BlockSpec((block_i, block_j), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_i,), lambda i, j: (i,)),
+            pl.BlockSpec((block_i,), lambda i, j: (i,)),
+            pl.BlockSpec((block_i,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(p, p, a)

@@ -1,0 +1,94 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs as traced JAX ops, validating the exact TPU program
+logic. On a TPU backend they compile to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.multilinear_dense import multilinear_dense_pallas
+from repro.kernels.segment_min_bucketed import segment_min_bucketed_pallas
+
+INF = jnp.float32(jnp.inf)
+IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+UMAX = np.uint32(0xFFFFFFFF)
+
+
+def _use_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_i", "block_j", "interpret"))
+def multilinear_dense(
+    p: jax.Array,
+    a: jax.Array,
+    *,
+    block_i: int = 128,
+    block_j: int = 128,
+    interpret: bool | None = None,
+):
+    """Min outgoing edge per vertex over a dense adjacency (see ref.py).
+
+    Pads n up to the block size; padded rows/cols carry +inf / sentinel p
+    values so they reduce to the monoid identity.
+    """
+    n = a.shape[0]
+    bi = min(block_i, max(8, 1 << (n - 1).bit_length()))
+    bj = min(block_j, max(128, 1 << (n - 1).bit_length()))
+    n_i = -(-n // bi) * bi
+    n_j = -(-n // bj) * bj
+    a_p = jnp.full((n_i, n_j), INF, jnp.float32).at[:n, :n].set(a)
+    # Padded vertices get unique negative ids so p_i != p_j never matches
+    # spuriously... they must *never* be selected: a = inf handles that.
+    p_pad_i = jnp.full((n_i,), -1, jnp.int32).at[:n].set(p.astype(jnp.int32))
+    minw, mincol, minpay = multilinear_dense_pallas(
+        p_pad_i,
+        a_p,
+        block_i=bi,
+        block_j=bj,
+        interpret=_use_interpret(interpret),
+    )
+    return minw[:n], mincol[:n], minpay[:n]
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def segment_min_bucketed(
+    keys: jax.Array,
+    rows: jax.Array,
+    *,
+    block_rows: int = 128,
+    interpret: bool | None = None,
+):
+    return segment_min_bucketed_pallas(
+        keys, rows, block_rows=block_rows, interpret=_use_interpret(interpret)
+    )
+
+
+def bucket_edges_by_row_block(
+    seg: np.ndarray, keys: np.ndarray, n: int, block_rows: int = 128
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side bucketing for the segment-min kernel: group edges by
+    ``seg // block_rows`` and pad each bucket to the max size (multiple of
+    128 lanes). Returns (keys [NB, BE] uint32, rows [NB, BE] int32)."""
+    nb = -(-n // block_rows)
+    b = seg // block_rows
+    counts = np.bincount(b, minlength=nb)
+    be = max(128, int(-(-counts.max() // 128) * 128)) if len(seg) else 128
+    keys_out = np.full((nb, be), UMAX, np.uint32)
+    rows_out = np.zeros((nb, be), np.int32)
+    order = np.argsort(b, kind="stable")
+    seg_s, keys_s, b_s = seg[order], keys[order], b[order]
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    for k in range(nb):
+        lo, hi = starts[k], starts[k + 1]
+        keys_out[k, : hi - lo] = keys_s[lo:hi]
+        rows_out[k, : hi - lo] = seg_s[lo:hi] - k * block_rows
+    return keys_out, rows_out

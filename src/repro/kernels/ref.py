@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (no Pallas imports)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+UMAX = jnp.uint32(0xFFFFFFFF)
+
+
+def multilinear_dense_ref(p: jax.Array, a: jax.Array):
+    """Oracle for the dense-block multilinear MSF kernel.
+
+    w_i = min_j { a_ij : p_i != p_j }, with (weight, col) lexicographic
+    argmin and payload p_argmin. Returns (minw f32 [n], mincol i32 [n],
+    minpay i32 [n]); identity (inf, IMAX, IMAX) for rows with no valid edge.
+    """
+    n = a.shape[0]
+    col = jnp.arange(n, dtype=jnp.int32)
+    valid = (p[:, None] != p[None, :]) & (a < INF)
+    w = jnp.where(valid, a, INF)
+    minw = jnp.min(w, axis=1)
+    on = (w == minw[:, None]) & (minw[:, None] < INF)
+    mincol = jnp.min(jnp.where(on, col[None, :], IMAX), axis=1)
+    winner = on & (col[None, :] == mincol[:, None])
+    minpay = jnp.min(
+        jnp.where(winner, p[None, :].astype(jnp.int32), IMAX), axis=1
+    )
+    return minw, mincol, minpay
+
+
+def segment_min_bucketed_ref(keys: jax.Array, rows: jax.Array, block_rows: int):
+    """Oracle for the bucketed packed-key segment-min kernel.
+
+    keys: uint32 [NB, BE] (UMAX = identity/padding); rows: int32 [NB, BE],
+    local row index within the bucket's row block. Returns uint32
+    [NB * block_rows].
+    """
+    nb, be = keys.shape
+    r = jnp.arange(block_rows, dtype=jnp.int32)
+    # [NB, block_rows, BE] compare-broadcast-reduce
+    eq = rows[:, None, :] == r[None, :, None]
+    vals = jnp.where(eq, keys[:, None, :], UMAX)
+    return jnp.min(vals, axis=2).reshape(nb * block_rows)

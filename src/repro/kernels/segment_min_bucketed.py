@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: bucketed packed-key segment-min (sparse MSF path).
+
+TPU adaptation of the paper's sparse multilinear kernel: TPUs have no
+vectorized scatter, so instead of CRCW min-writes we pre-bucket edges by
+output row block (host side, part of graph partitioning) and reduce each
+bucket with a compare-broadcast-min over an (BI, BE) VMEM tile:
+
+    out[r] = min over bucket edges e { keys[e] : rows[e] == r }
+
+Keys are the pack32 layout (weight << 24 | idx) from ``repro.core.semiring``
+— a single uint32 min implements the full MINWEIGHT monoid in the paper's
+integer-weight regime. Identity/padding = 0xFFFFFFFF.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+UMAX = np.uint32(0xFFFFFFFF)
+
+
+def _kernel(keys_ref, rows_ref, out_ref, *, block_rows, block_edges):
+    keys = keys_ref[0, :]  # [BE] uint32
+    rows = rows_ref[0, :]  # [BE] int32 in [0, block_rows)
+    r = jax.lax.broadcasted_iota(jnp.int32, (block_rows, block_edges), 0)
+    eq = rows[None, :] == r
+    vals = jnp.where(eq, keys[None, :], UMAX)
+    out_ref[...] = jnp.min(vals, axis=1)
+
+
+def segment_min_bucketed_pallas(
+    keys: jax.Array,
+    rows: jax.Array,
+    *,
+    block_rows: int = 128,
+    interpret: bool = False,
+):
+    """keys uint32 [NB, BE]; rows int32 [NB, BE] (local row in the bucket's
+    block). Returns uint32 [NB * block_rows]."""
+    nb, be = keys.shape
+    kernel = functools.partial(_kernel, block_rows=block_rows, block_edges=be)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda b: (b, 0)),
+            pl.BlockSpec((1, be), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((nb * block_rows,), jnp.uint32),
+        interpret=interpret,
+    )(keys, rows)

@@ -1,0 +1,428 @@
+"""Dry-run cell programs: (arch × shape × mesh) → lowerable jit function.
+
+``build_cell`` returns a ``Cell`` with the step function, abstract inputs
+(``ShapeDtypeStruct`` — never allocated), and in/out shardings, following
+the shannon/kernels pattern. ``input_specs`` for modality frontends are
+stubs per the assignment (precomputed features), and GNN feature tensors
+stand in for dataset arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig, ShapeCell
+from repro.graphs.sampler import max_sample_sizes
+from repro.models import transformer as T
+from repro.models import gnn as G
+from repro.models import recsys as R
+from repro.optim.adamw import adamw_init
+from repro.train import steps
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Any
+    out_shardings: Any
+    meta: Dict[str, Any]
+    mesh: Any = None
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _dp(mesh):
+    return T.dp_axis_names(mesh)
+
+
+def _all_axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _opt_specs(param_specs):
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(mu=param_specs, nu=param_specs, step=P())
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch: str, cfg: LMConfig, shape: ShapeCell, mesh, variant: Dict) -> Cell:
+    dp = _dp(mesh)
+    if shape.kind in ("prefill", "decode"):
+        # serving keeps no f32 master weights: bf16 params halve both the
+        # weight-gather wire format and the HBM weight reads
+        cfg = dataclasses.replace(
+            cfg, param_dtype=variant.get("serve_param_dtype", "bfloat16")
+        )
+    pspecs = T.lm_param_specs(cfg, mesh)
+    params_abs = jax.eval_shape(partial(T.init_lm, cfg=cfg), jax.random.key(0))
+    b, s = shape.global_batch, shape.seq_len
+    meta: Dict[str, Any] = dict(
+        family="lm", params=cfg.param_count(), active_params=cfg.active_param_count(),
+    )
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        tokens = _sds((b, s), jnp.int32)
+        tskip = bool(variant.get("triangle_skip", cfg.triangle_skip))
+        cfg_v = dataclasses.replace(
+            cfg,
+            vocab_chunk=variant.get("vocab_chunk", cfg.vocab_chunk),
+            attn_q_chunk=variant.get("attn_q_chunk", cfg.attn_q_chunk),
+            attn_kv_chunk=variant.get("attn_kv_chunk", cfg.attn_kv_chunk),
+            remat=bool(variant.get("remat", cfg.remat)),
+            fsdp=bool(variant.get("fsdp", cfg.fsdp)),
+            grad_accum=int(variant.get("grad_accum", cfg.grad_accum)),
+        )
+        pspecs = T.lm_param_specs(cfg_v, mesh)
+
+        def fn(params, opt, toks, labels):
+            loss, grads = steps.lm_loss_and_grad(
+                params, toks, labels, cfg_v, mesh, triangle_skip=tskip
+            )
+            params, opt, gnorm, _ = steps._apply_opt(params, opt, grads, opt.step)
+            return params, opt, {"loss": loss, "gnorm": gnorm}
+
+        meta["model_flops"] = 6 * cfg.active_param_count() * b * s
+        return Cell(
+            name=f"{arch}:{shape.name}",
+            fn=fn,
+            abstract_args=(params_abs, opt_abs, tokens, tokens),
+            in_shardings=(pspecs, _opt_specs(pspecs), P(dp, None), P(dp, None)),
+            out_shardings=(pspecs, _opt_specs(pspecs), P()),
+            meta=meta,
+        )
+
+    if shape.kind == "prefill":
+        tokens = _sds((b, s), jnp.int32)
+
+        def fn(params, toks):
+            return steps.lm_prefill_step(params, toks, cfg, mesh)
+
+        meta["model_flops"] = 2 * cfg.active_param_count() * b * s
+        return Cell(
+            name=f"{arch}:{shape.name}",
+            fn=fn,
+            abstract_args=(params_abs, tokens),
+            in_shardings=(pspecs, P(dp, None)),
+            out_shardings=(P(dp), _cache_spec_tree(cfg, mesh, b)),
+            meta=meta,
+        )
+
+    if shape.kind == "decode":
+        cache_abs = T.cache_shape(cfg, b, s)
+        cspec = _cache_spec_tree(cfg, mesh, b)
+        token = _sds((b,), jnp.int32)
+
+        def fn(params, tok, cache):
+            pos = jnp.int32(s - 1)
+            return steps.lm_decode_step(params, tok, cache, pos, cfg, mesh)
+
+        meta["model_flops"] = 2 * cfg.active_param_count() * b
+        tok_spec = P(dp) if b % max(T.dp_size(mesh), 1) == 0 and T.dp_size(mesh) > 1 else P()
+        return Cell(
+            name=f"{arch}:{shape.name}",
+            fn=fn,
+            abstract_args=(params_abs, token, cache_abs),
+            in_shardings=(pspecs, tok_spec, cspec),
+            out_shardings=(tok_spec, cspec),
+            meta=meta,
+        )
+    raise ValueError(shape.kind)
+
+
+def _cache_spec_tree(cfg, mesh, batch):
+    return T.cache_specs(cfg, mesh, batch)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_batch_abstract(cfg: GNNConfig, shape: ShapeCell, mesh):
+    """Abstract batch arrays for a GNN shape cell (directed edge count =
+    2× undirected for the dataset-style cells). Node/edge counts are padded
+    to a mesh-divisible size — exactly what the real pipeline's padding
+    does — so ``jit in_shardings`` divisibility holds."""
+    if shape.name == "minibatch_lg":
+        n, e = max_sample_sizes(shape.batch_nodes, shape.fanout)
+        d_in = shape.d_feat
+        n_graphs = 1
+    elif shape.name == "molecule":
+        n = shape.n_nodes * shape.batch_graphs
+        e = shape.n_edges * shape.batch_graphs
+        d_in = shape.d_feat
+        n_graphs = shape.batch_graphs
+    else:
+        n, e = shape.n_nodes, 2 * shape.n_edges
+        d_in = shape.d_feat
+        n_graphs = 1
+    p = mesh.size
+    n = -(-n // p) * p
+    e = -(-e // p) * p
+
+    batch: Dict[str, Any] = dict(
+        src=_sds((e,), jnp.int32),
+        dst=_sds((e,), jnp.int32),
+        edge_valid=_sds((e,), jnp.bool_),
+    )
+    if cfg.kind == "nequip":
+        batch.update(
+            species=_sds((n,), jnp.int32),
+            pos=_sds((n, 3), jnp.float32),
+            graph_ids=_sds((n,), jnp.int32),
+            energy=_sds((n_graphs,), jnp.float32),
+        )
+    else:
+        batch["x"] = _sds((n, d_in), jnp.float32)
+        if cfg.kind in ("meshgraphnet", "gatedgcn"):
+            d_e = 4 if cfg.kind == "meshgraphnet" else 1
+            batch["e_feat"] = _sds((e, d_e), jnp.float32)
+        if cfg.n_classes:
+            batch["labels"] = _sds((n,), jnp.int32)
+            batch["node_mask"] = _sds((n,), jnp.float32)
+        else:
+            batch["targets"] = _sds((n, cfg.d_out), jnp.float32)
+            batch["node_mask"] = _sds((n,), jnp.float32)
+    return batch, d_in, n_graphs
+
+
+def _gnn_cell(arch: str, cfg: GNNConfig, shape: ShapeCell, mesh, variant: Dict) -> Cell:
+    batch_abs, d_in, n_graphs = _gnn_batch_abstract(cfg, shape, mesh)
+    cfg = dataclasses.replace(cfg, d_in=d_in or cfg.d_in)
+    flat = _all_axes(mesh)
+
+    if cfg.kind == "nequip":
+        params_abs = jax.eval_shape(partial(G.init_nequip, cfg=cfg), jax.random.key(0))
+    elif cfg.kind == "gat":
+        params_abs = jax.eval_shape(partial(G.init_gat, cfg=cfg), jax.random.key(0))
+    elif cfg.kind == "meshgraphnet":
+        params_abs = jax.eval_shape(partial(G.init_meshgraphnet, cfg=cfg), jax.random.key(0))
+    else:
+        params_abs = jax.eval_shape(partial(G.init_gatedgcn, cfg=cfg), jax.random.key(0))
+    opt_abs = jax.eval_shape(adamw_init, params_abs)
+    pspecs = jax.tree.map(lambda _: P(), params_abs)
+
+    # nodes/edges shard over the flattened mesh (1D edge partition; the 2D
+    # multilinear schedule is the §Perf variant for ogb_products).
+    def bspec(k, v):
+        if v.ndim == 0:
+            return P()
+        return P(flat, *([None] * (v.ndim - 1)))
+
+    bspecs = {k: bspec(k, v) for k, v in batch_abs.items()}
+    if "energy" in bspecs:
+        bspecs["energy"] = P()
+
+    def fn(params, opt, batch):
+        return steps.gnn_train_step(params, opt, batch, cfg, n_graphs)
+
+    # per-edge analytic flops (fwd+bwd ≈ 3×fwd)
+    e = batch_abs["src"].shape[0]
+    n = (batch_abs.get("x") or batch_abs["species"]).shape[0]
+    h = cfg.d_hidden
+    if cfg.kind == "gat":
+        mf = 3 * (2 * n * cfg.d_in * h * cfg.n_heads + 6 * e * h * cfg.n_heads)
+    elif cfg.kind == "meshgraphnet":
+        mf = 3 * cfg.n_layers * (2 * (3 * h) * h * e * 2 + 2 * (2 * h) * h * n * 2)
+    elif cfg.kind == "gatedgcn":
+        mf = 3 * cfg.n_layers * (2 * 5 * h * h * (2 * e + 3 * n))
+    else:
+        paths = len(G._nequip_paths(cfg.l_max))
+        mf = 3 * cfg.n_layers * e * paths * h * 75  # CG contraction dominated
+    return Cell(
+        name=f"{arch}:{shape.name}",
+        fn=fn,
+        abstract_args=(params_abs, opt_abs, batch_abs),
+        in_shardings=(pspecs, _opt_specs(pspecs), bspecs),
+        out_shardings=(pspecs, _opt_specs(pspecs), P()),
+        meta=dict(family="gnn", model_flops=mf, n_nodes=n, n_edges=e),
+    )
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_cell(arch: str, cfg: RecsysConfig, shape: ShapeCell, mesh, variant: Dict) -> Cell:
+    dp = _dp(mesh)
+    flat = _all_axes(mesh)
+    f = cfg.n_sparse
+    dsz = max(T.dp_size(mesh), 1)
+
+    if shape.kind == "retrieval":
+        # pad the candidate set to a mesh-divisible size (what the real
+        # index-build does)
+        n_cand = -(-shape.n_candidates // mesh.size) * mesh.size
+        params_abs = jax.eval_shape(
+            partial(R.init_retrieval, cfg=cfg, n_candidates=n_cand),
+            jax.random.key(0),
+        )
+        pspecs = {"table": P("model", None), "tower_w": P(), "items": P(flat, None)}
+        ids = _sds((shape.batch, f), jnp.int32)
+
+        def fn(params, ids):
+            return steps.recsys_retrieval_step(params, ids, cfg)
+
+        return Cell(
+            name=f"{arch}:{shape.name}",
+            fn=fn,
+            abstract_args=(params_abs, ids),
+            in_shardings=(pspecs, P()),
+            out_shardings=P(),
+            meta=dict(
+                family="recsys",
+                model_flops=2 * shape.n_candidates * cfg.retrieval_dim * shape.batch,
+            ),
+        )
+
+    params_abs = jax.eval_shape(partial(R.init_xdeepfm, cfg=cfg), jax.random.key(0))
+    pspecs = jax.tree.map(lambda _: P(), params_abs)
+    pspecs["table"] = P("model", None)
+    pspecs["lin_table"] = P("model", None)
+    b = shape.batch
+    ids = _sds((b, f), jnp.int32)
+    bspec = P(dp, None) if b % dsz == 0 and dsz > 1 else P()
+    d = cfg.embed_dim
+    cin_f = 0
+    h_prev = f
+    for hh in cfg.cin_layers:
+        cin_f += 2 * h_prev * f * hh * d
+        h_prev = hh
+    mlp_f = 0
+    dims = [f * d] + list(cfg.mlp_layers) + [1]
+    for a_, b_ in zip(dims[:-1], dims[1:]):
+        mlp_f += 2 * a_ * b_
+    fwd = b * (cin_f + mlp_f)
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        labels = _sds((b,), jnp.float32)
+        lspec = P(dp) if b % dsz == 0 and dsz > 1 else P()
+
+        def fn(params, opt, ids, labels):
+            return steps.recsys_train_step(params, opt, ids, labels, cfg)
+
+        return Cell(
+            name=f"{arch}:{shape.name}",
+            fn=fn,
+            abstract_args=(params_abs, opt_abs, ids, labels),
+            in_shardings=(pspecs, _opt_specs(pspecs), bspec, lspec),
+            out_shardings=(pspecs, _opt_specs(pspecs), P()),
+            meta=dict(family="recsys", model_flops=3 * fwd),
+        )
+
+    def fn(params, ids):
+        return steps.recsys_serve_step(params, ids, cfg)
+
+    lspec = P(dp) if b % dsz == 0 and dsz > 1 else P()
+    return Cell(
+        name=f"{arch}:{shape.name}",
+        fn=fn,
+        abstract_args=(params_abs, ids),
+        in_shardings=(pspecs, bspec),
+        out_shardings=lspec,
+        meta=dict(family="recsys", model_flops=fwd),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MSF engine cells (the paper's own system on the production mesh)
+# ---------------------------------------------------------------------------
+
+def build_msf_cell(shape: ShapeCell, mesh, *, shortcut="csp", capacity=1 << 20, pack=0) -> Cell:
+    from repro.core.msf_dist import msf_distributed
+    from repro.graphs.partition import Partition2D, pad_n
+
+    axes = mesh.axis_names
+    if "pod" in axes:
+        row_axis: Any = ("pod", "data")
+        rows = mesh.shape["pod"] * mesh.shape["data"]
+    else:
+        row_axis = "data"
+        rows = mesh.shape["data"]
+    cols = mesh.shape["model"]
+    n = shape.n_nodes
+    m_dir = 2 * shape.n_edges
+    n_pad, S = pad_n(n, rows, cols)
+    e_max = -(-m_dir // (rows * cols))
+    part = Partition2D(
+        src_row=None, dst_col=None, w=None, eid=None, valid=None,
+        rows=rows, cols=cols, shard_size=S, n=n, n_pad=n_pad,
+    )
+    driver = msf_distributed(
+        part, mesh, row_axis=row_axis, col_axis="model",
+        shortcut=shortcut, capacity=capacity, pack=bool(pack),
+    )
+    shp = (rows, cols, e_max)
+    args = (
+        _sds(shp, jnp.int32), _sds(shp, jnp.int32), _sds(shp, jnp.float32),
+        _sds(shp, jnp.int32), _sds(shp, jnp.bool_),
+    )
+    espec = P(row_axis, "model", None)
+    return Cell(
+        name=f"msf-engine:{shape.name}",
+        fn=driver,
+        abstract_args=args,
+        in_shardings=(espec,) * 5,
+        out_shardings=None,  # driver is already jitted with internal specs
+        mesh=mesh,
+        meta=dict(
+            family="msf", n=n, m=shape.n_edges,
+            # per AS iteration: ~1 flop-ish comparison per directed edge; use
+            # 5 ops/edge × log2(n) iterations as the useful-work proxy
+            model_flops=5 * m_dir * max(int(np.log2(max(n, 2))), 1),
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh, variant: Optional[Dict] = None) -> Cell:
+    variant = variant or {}
+    family = registry.family_of(arch)
+    cfg = registry.get_config(arch)
+    shape = registry.get_shape(arch, shape_name)
+    if family == "lm":
+        cell = _lm_cell(arch, cfg, shape, mesh, variant)
+    elif family == "gnn":
+        cell = _gnn_cell(arch, cfg, shape, mesh, variant)
+    elif family == "recsys":
+        cell = _recsys_cell(arch, cfg, shape, mesh, variant)
+    else:
+        raise ValueError(family)
+    cell.mesh = mesh
+    return cell
+
+
+def lower_cell(cell: Cell):
+    if cell.out_shardings is None:
+        return cell.fn.lower(*cell.abstract_args)  # already jitted (msf driver)
+    jitted = jax.jit(
+        cell.fn,
+        in_shardings=_ns(cell.mesh, cell.in_shardings),
+        out_shardings=_ns(cell.mesh, cell.out_shardings),
+    )
+    return jitted.lower(*cell.abstract_args)

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state. Logical axes:
+
+- ``pod``   — inter-pod data parallelism (DCN-ish links at real scale)
+- ``data``  — intra-pod data parallelism / FSDP
+- ``model`` — tensor/expert parallelism
+
+Single pod = 16×16 = 256 chips (TPU v5e pod); multi-pod adds a leading pod
+axis (2×16×16 = 512). Any (P, D, M) shape works — sharding rules reference
+axis *names* — so scaling to 64 pods (16k chips) is a config change.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """1×1 mesh for smoke tests / examples on this CPU container."""
+    return make_mesh((1, 1), ("data", "model"))

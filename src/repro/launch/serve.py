@@ -1,0 +1,69 @@
+"""Batched LM serving demo: prefill a prompt batch, decode greedily.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import registry
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as T
+    from repro.train import steps as S
+
+    assert registry.family_of(args.arch) == "lm", "serving demo is for LM archs"
+    cfg = registry.get_config(args.arch, smoke=True)
+    mesh = make_host_mesh()
+    params = T.init_lm(jax.random.key(0), cfg)
+    toks = jax.random.randint(
+        jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab
+    )
+
+    # serve with headroom for generated tokens
+    cache_len = args.prompt_len + args.tokens
+    pad = jnp.zeros((args.batch, args.tokens), jnp.int32)
+    prefill = jax.jit(lambda p, t: S.lm_prefill_step(p, t, cfg, mesh))
+    decode = jax.jit(lambda p, tok, c, pos: S.lm_decode_step(p, tok, c, pos, cfg, mesh))
+
+    t0 = time.time()
+    nxt, cache = prefill(params, toks)
+    # right-pad the cache to full serving capacity (prefill emitted exactly
+    # prompt_len entries; windowed archs already rolled)
+    tcap = cache["k"].shape[2]
+    want = cache_len if cfg.sliding_window is None else min(cache_len, cfg.sliding_window)
+    if tcap < want:
+        padw = want - tcap
+        cache = {
+            k: jnp.pad(v, ((0, 0), (0, 0), (0, padw), (0, 0), (0, 0)))
+            for k, v in cache.items()
+        }
+    print(f"prefill: {args.batch}x{args.prompt_len} in {time.time()-t0:.2f}s")
+
+    out = [nxt]
+    t0 = time.time()
+    for i in range(args.tokens - 1):
+        pos = jnp.int32(args.prompt_len + i)
+        nxt, cache = decode(params, out[-1], cache, pos)
+        out.append(nxt)
+    dt = time.time() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"decoded {args.tokens - 1} steps x batch {args.batch} in {dt:.2f}s "
+          f"({(args.tokens - 1) * args.batch / max(dt, 1e-9):.1f} tok/s)")
+    print("sample:", gen[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

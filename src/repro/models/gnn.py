@@ -1,0 +1,257 @@
+"""GNN architectures on the shared sparse substrate (DESIGN.md §4).
+
+Message passing = the paper's multilinear form ``⊕_j f(x_i, a_ij, x_j)``:
+edge-wise ``f`` + ``segment_*`` reduction, the same machinery the MSF
+engine uses (``jax.ops.segment_sum`` over an edge index — JAX has no
+CSR/CSC, so this scatter-based formulation IS the system's sparse layer).
+
+Models: GAT (SDDMM → edge-softmax → SpMM), MeshGraphNet (edge-MLP MPNN),
+GatedGCN (gated aggregation), NequIP (E(3) tensor-product interactions via
+``repro.models.o3``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.models.o3 import bessel_basis_np, clebsch_gordan, sph_harm_np, tp_paths
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def _mlp_init(rng, sizes, name, params, ln=True):
+    keys = jax.random.split(rng, len(sizes))
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        params[f"{name}_w{i}"] = jax.random.normal(keys[i], (a, b)) * math.sqrt(2.0 / a)
+        params[f"{name}_b{i}"] = jnp.zeros((b,))
+    if ln:
+        params[f"{name}_ln"] = jnp.ones((sizes[-1],))
+
+
+def _mlp_apply(params, name, x, n_layers, ln=True, act=jax.nn.relu):
+    for i in range(n_layers):
+        x = x @ params[f"{name}_w{i}"] + params[f"{name}_b{i}"]
+        if i < n_layers - 1:
+            x = act(x)
+    if ln:
+        mu = x.mean(-1, keepdims=True)
+        sd = jnp.sqrt(((x - mu) ** 2).mean(-1, keepdims=True) + 1e-6)
+        x = (x - mu) / sd * params[f"{name}_ln"]
+    return x
+
+
+def _edge_softmax(scores, dst, n, edge_valid):
+    """Numerically-stable softmax over incoming edges per destination."""
+    scores = jnp.where(edge_valid[:, None], scores, NEG_INF)
+    mx = jax.ops.segment_max(scores, dst, num_segments=n)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.where(edge_valid[:, None], jnp.exp(scores - mx[dst]), 0.0)
+    denom = jax.ops.segment_sum(ex, dst, num_segments=n)
+    return ex / jnp.maximum(denom[dst], 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# GAT
+# ---------------------------------------------------------------------------
+
+def init_gat(rng, cfg: GNNConfig) -> Dict[str, Any]:
+    h, heads = cfg.d_hidden, cfg.n_heads
+    dims = [cfg.d_in] + [h * heads] * (cfg.n_layers - 1) + [cfg.n_classes]
+    params: Dict[str, Any] = {}
+    keys = jax.random.split(rng, 3 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        d_in = dims[i]
+        d_out = h if i < cfg.n_layers - 1 else cfg.n_classes
+        params[f"w{i}"] = jax.random.normal(keys[3 * i], (d_in, heads, d_out)) * math.sqrt(
+            2.0 / d_in
+        )
+        params[f"a_src{i}"] = jax.random.normal(keys[3 * i + 1], (heads, d_out)) * 0.1
+        params[f"a_dst{i}"] = jax.random.normal(keys[3 * i + 2], (heads, d_out)) * 0.1
+    return params
+
+
+def apply_gat(params, x, src, dst, edge_valid, cfg: GNNConfig):
+    n = x.shape[0]
+    for i in range(cfg.n_layers):
+        h = jnp.einsum("nd,dhk->nhk", x, params[f"w{i}"])  # [N, H, K]
+        s_src = (h * params[f"a_src{i}"][None]).sum(-1)  # [N, H]
+        s_dst = (h * params[f"a_dst{i}"][None]).sum(-1)
+        e = jax.nn.leaky_relu(s_src[src] + s_dst[dst], 0.2)  # [E, H]
+        alpha = _edge_softmax(e, dst, n, edge_valid)
+        msg = alpha[..., None] * h[src]  # [E, H, K]
+        agg = jax.ops.segment_sum(msg, dst, num_segments=n)
+        if i < cfg.n_layers - 1:
+            x = jax.nn.elu(agg.reshape(n, -1))
+        else:
+            x = agg.mean(axis=1)  # average heads for the output layer
+    return x  # [N, n_classes]
+
+
+# ---------------------------------------------------------------------------
+# MeshGraphNet
+# ---------------------------------------------------------------------------
+
+def init_meshgraphnet(rng, cfg: GNNConfig, d_edge_in: int = 4) -> Dict[str, Any]:
+    h = cfg.d_hidden
+    params: Dict[str, Any] = {}
+    keys = jax.random.split(rng, 2 * cfg.n_layers + 3)
+    _mlp_init(keys[0], [cfg.d_in, h, h], "enc_node", params)
+    _mlp_init(keys[1], [d_edge_in, h, h], "enc_edge", params)
+    for i in range(cfg.n_layers):
+        _mlp_init(keys[2 + 2 * i], [3 * h, h, h], f"edge{i}", params)
+        _mlp_init(keys[3 + 2 * i], [2 * h, h, h], f"node{i}", params)
+    _mlp_init(keys[-1], [h, h, cfg.d_out], "dec", params, ln=False)
+    return params
+
+
+def apply_meshgraphnet(params, x, e_feat, src, dst, edge_valid, cfg: GNNConfig):
+    n = x.shape[0]
+    h = _mlp_apply(params, "enc_node", x, 2)
+    e = _mlp_apply(params, "enc_edge", e_feat, 2)
+    ev = edge_valid[:, None]
+    for i in range(cfg.n_layers):
+        e_in = jnp.concatenate([e, h[src], h[dst]], axis=-1)
+        e = e + _mlp_apply(params, f"edge{i}", e_in, 2)
+        agg = jax.ops.segment_sum(jnp.where(ev, e, 0.0), dst, num_segments=n)
+        h = h + _mlp_apply(params, f"node{i}", jnp.concatenate([h, agg], -1), 2)
+    return _mlp_apply(params, "dec", h, 2, ln=False)
+
+
+# ---------------------------------------------------------------------------
+# GatedGCN
+# ---------------------------------------------------------------------------
+
+def init_gatedgcn(rng, cfg: GNNConfig) -> Dict[str, Any]:
+    h = cfg.d_hidden
+    params: Dict[str, Any] = {}
+    keys = jax.random.split(rng, 6 * cfg.n_layers + 3)
+    params["embed_node"] = jax.random.normal(keys[0], (cfg.d_in, h)) * math.sqrt(1.0 / cfg.d_in)
+    params["embed_edge"] = jax.random.normal(keys[1], (1, h)) * 0.1
+    for i in range(cfg.n_layers):
+        for j, nm in enumerate(["A1", "A2", "A3", "U", "V"]):
+            params[f"{nm}{i}"] = jax.random.normal(
+                keys[2 + 6 * i + j], (h, h)
+            ) * math.sqrt(1.0 / h)
+        params[f"ln_h{i}"] = jnp.ones((h,))
+        params[f"ln_e{i}"] = jnp.ones((h,))
+    params["out_w"] = jax.random.normal(keys[-1], (h, cfg.n_classes)) * math.sqrt(1.0 / h)
+    params["out_b"] = jnp.zeros((cfg.n_classes,))
+    return params
+
+
+def _ln(x, g):
+    mu = x.mean(-1, keepdims=True)
+    sd = jnp.sqrt(((x - mu) ** 2).mean(-1, keepdims=True) + 1e-6)
+    return (x - mu) / sd * g
+
+
+def apply_gatedgcn(params, x, e_feat, src, dst, edge_valid, cfg: GNNConfig):
+    n = x.shape[0]
+    h = x @ params["embed_node"]
+    e = e_feat @ params["embed_edge"]
+    ev = edge_valid[:, None]
+    for i in range(cfg.n_layers):
+        e_new = h[src] @ params[f"A1{i}"] + h[dst] @ params[f"A2{i}"] + e @ params[f"A3{i}"]
+        eta = jax.nn.sigmoid(e_new)
+        msg = jnp.where(ev, eta * (h[src] @ params[f"V{i}"]), 0.0)
+        num = jax.ops.segment_sum(msg, dst, num_segments=n)
+        den = jax.ops.segment_sum(jnp.where(ev, eta, 0.0), dst, num_segments=n)
+        h = h + jax.nn.relu(_ln(h @ params[f"U{i}"] + num / (den + 1e-6), params[f"ln_h{i}"]))
+        e = e + jax.nn.relu(_ln(e_new, params[f"ln_e{i}"]))
+    return h @ params["out_w"] + params["out_b"]
+
+
+# ---------------------------------------------------------------------------
+# NequIP (simplified; structurally faithful TP interactions, see o3.py)
+# ---------------------------------------------------------------------------
+
+def _nequip_paths(l_max):
+    return tp_paths(l_max)
+
+
+def init_nequip(rng, cfg: GNNConfig, n_species: int = 4) -> Dict[str, Any]:
+    mul, lm = cfg.d_hidden, cfg.l_max
+    paths = _nequip_paths(lm)
+    params: Dict[str, Any] = {"species_embed": jax.random.normal(rng, (n_species, mul)) * 0.5}
+    keys = jax.random.split(rng, 4 * cfg.n_layers + 2)
+    for i in range(cfg.n_layers):
+        # radial MLP: n_rbf -> mul weights per TP path
+        _mlp_init(keys[4 * i], [cfg.n_rbf, 32, len(paths) * mul], f"radial{i}", params, ln=False)
+        for l in range(lm + 1):
+            params[f"self{i}_l{l}"] = jax.random.normal(
+                keys[4 * i + 1 + (l % 3)], (mul, mul)
+            ) * math.sqrt(1.0 / mul)
+        params[f"gate{i}"] = jax.random.normal(keys[4 * i + 2], (mul, lm * mul)) * 0.1
+    _mlp_init(keys[-1], [mul, 16, 1], "readout", params, ln=False)
+    return params
+
+
+def apply_nequip(params, species, pos, src, dst, edge_valid, graph_ids, n_graphs, cfg: GNNConfig):
+    """species int32 [N]; pos f32 [N, 3]; returns per-graph energy [G]."""
+    n = species.shape[0]
+    mul, lm = cfg.d_hidden, cfg.l_max
+    paths = _nequip_paths(lm)
+    basis = bessel_basis_np(cfg.n_rbf, cfg.cutoff)
+
+    rel = pos[dst] - pos[src]  # [E, 3]
+    # safe norm: sqrt(max(|x|², ε²)) keeps the gradient finite at rel = 0
+    # (padded edges) — plain norm() has a NaN vjp there.
+    r = jnp.sqrt(jnp.maximum(jnp.sum(rel * rel, axis=-1), 1e-18))
+    rbf = basis(r) * edge_valid[:, None]
+    # spherical harmonics of edge directions (jnp mirror of o3.sph_harm_np)
+    sh = {l: _sph_harm_jnp(rel, l) for l in range(lm + 1)}
+    cgs = {p: jnp.asarray(clebsch_gordan(*p), jnp.float32) for p in paths}
+
+    feats = {0: jnp.take(params["species_embed"], species, axis=0, mode='clip')[..., None]}
+    for l in range(1, lm + 1):
+        feats[l] = jnp.zeros((n, mul, 2 * l + 1))
+
+    for i in range(cfg.n_layers):
+        w_all = _mlp_apply(params, f"radial{i}", rbf, 2, ln=False)  # [E, P*mul]
+        w_all = w_all.reshape(-1, len(paths), mul)
+        msgs = {l: 0.0 for l in range(lm + 1)}
+        for pi, (l1, l2, l3) in enumerate(paths):
+            hj = feats[l1][src]  # [E, mul, 2l1+1]
+            y = sh[l2]  # [E, 2l2+1]
+            w = w_all[:, pi, :] * edge_valid[:, None]  # [E, mul]
+            m = jnp.einsum("pqr,emq,er,em->emp", cgs[(l1, l2, l3)], hj, y, w)
+            msgs[l3] = msgs[l3] + m
+        new = {}
+        for l in range(lm + 1):
+            agg = jax.ops.segment_sum(msgs[l], dst, num_segments=n)
+            mixed = jnp.einsum("nmp,mk->nkp", agg, params[f"self{i}_l{l}"])
+            new[l] = feats[l] + mixed
+        # gate nonlinearity: scalars via silu, l>0 gated by learned scalars
+        scal = new[0][..., 0]
+        gates = jax.nn.sigmoid(scal @ params[f"gate{i}"]).reshape(n, lm, mul)
+        out = {0: jax.nn.silu(scal)[..., None]}
+        for l in range(1, lm + 1):
+            out[l] = new[l] * gates[:, l - 1, :, None]
+        feats = out
+
+    e_atom = _mlp_apply(params, "readout", feats[0][..., 0], 2, ln=False)[..., 0]  # [N]
+    return jax.ops.segment_sum(e_atom, graph_ids, num_segments=n_graphs)
+
+
+def _sph_harm_jnp(vec, l):
+    n = jnp.sqrt(jnp.maximum(jnp.sum(vec * vec, axis=-1, keepdims=True), 1e-18))
+    v = vec / n
+    x, y, z = v[..., 0], v[..., 1], v[..., 2]
+    if l == 0:
+        return jnp.full(v.shape[:-1] + (1,), 0.5 / np.sqrt(np.pi))
+    if l == 1:
+        c = np.sqrt(3.0 / (4 * np.pi))
+        return jnp.stack([c * y, c * z, c * x], axis=-1)
+    if l == 2:
+        c = np.sqrt(15.0 / (4 * np.pi))
+        c0 = np.sqrt(5.0 / (16 * np.pi))
+        return jnp.stack(
+            [c * x * y, c * y * z, c0 * (3 * z * z - 1.0), c * x * z, 0.5 * c * (x * x - y * y)],
+            axis=-1,
+        )
+    raise NotImplementedError

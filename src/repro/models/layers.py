@@ -1,0 +1,154 @@
+"""Transformer building blocks (pure functions, GSPMD-friendly).
+
+Conventions: params are plain dicts of f32 arrays; compute casts to
+``cfg.dtype`` (bf16) with f32 softmax/norm/logit accumulation. Attention is
+blockwise (flash-style double scan) so no [S, S] score matrix is ever
+materialized — required for the 32k prefill cells.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, hd]; positions broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+class _QBlock(NamedTuple):
+    q: jax.Array  # [B, qc, KV, G, hd]
+    pos0: jax.Array  # scalar start position (traced or python int)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Sq, KV, G, hd]
+    k: jax.Array,  # [B, T, KV, hd]
+    v: jax.Array,  # [B, T, KV, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 2048,
+    kv_chunk: int = 2048,
+    triangle_skip: bool = False,
+) -> jax.Array:
+    """Blockwise softmax attention with running (max, denom, acc) state.
+
+    ``triangle_skip``: unroll the query-chunk loop in Python and bound each
+    inner KV scan at the causal frontier — skips strictly-upper-triangle
+    chunk pairs entirely (≈2× fewer attention FLOPs at long S; §Perf knob).
+    """
+    b, sq, nkv, g, hd = q.shape
+    t = k.shape[1]
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, t)
+    sq_orig, t_orig = sq, t
+    if sq % qc:  # pad queries; padded rows are sliced off at the end
+        pad = qc - sq % qc
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        sq += pad
+    if t % kc:  # pad keys/values; masked out via kpos < t_orig below
+        pad = kc - t % kc
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t += pad
+    nq, nk = sq // qc, t // kc
+    scale = np.float32(1.0 / np.sqrt(hd))
+
+    qr = q.reshape(b, nq, qc, nkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(b, nk, kc, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, kc, nkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def kv_step(qblk: _QBlock, carry, inputs):
+        m, l, acc = carry  # [B,KV,G,qc] f32, [B,KV,G,qc] f32, [B,KV,G,qc,hd] f32
+        kj, kblk, vblk = inputs
+        logits = (
+            jnp.einsum("bqkgd,bskd->bkgqs", qblk.q, kblk).astype(jnp.float32)
+            * scale
+        )
+        qpos = qblk.pos0 + jnp.arange(qc)
+        kpos = kj * kc + jnp.arange(kc)
+        msk = (kpos[None, :] < t_orig) & jnp.ones((qc, 1), bool)
+        if causal:
+            msk = msk & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            msk = msk & (kpos[None, :] > qpos[:, None] - window)
+        mskb = msk[None, None, None, :, :]
+        logits = jnp.where(mskb, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        diff = jnp.where(mskb, logits - m_new[..., None], NEG_INF)
+        pexp = jnp.exp(diff)
+        l_new = l * alpha + pexp.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", pexp.astype(vblk.dtype), vblk
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    def q_block(qblk: _QBlock, nk_bound: int):
+        init = (
+            jnp.full((b, nkv, g, qc), NEG_INF, jnp.float32),
+            jnp.zeros((b, nkv, g, qc), jnp.float32),
+            jnp.zeros((b, nkv, g, qc, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, inp: kv_step(qblk, c, inp),
+            init,
+            (jnp.arange(nk_bound), kr[:nk_bound], vr[:nk_bound]),
+        )
+        return acc / jnp.maximum(l, 1e-30)[..., None]  # [B,KV,G,qc,hd]
+
+    if triangle_skip and causal:
+        outs = []
+        for qi in range(nq):
+            nk_bound = min(nk, -(-((qi + 1) * qc) // kc))
+            outs.append(q_block(_QBlock(qr[qi], qi * qc), nk_bound))
+        out = jnp.stack(outs, axis=0)  # [nq, B, KV, G, qc, hd]
+    else:
+
+        def outer(_, inp):
+            qi, qblk = inp
+            return None, q_block(_QBlock(qblk, qi * qc), nk)
+
+        _, out = jax.lax.scan(outer, None, (jnp.arange(nq), qr))
+
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, nkv, g, hd)
+    return out[:, :sq_orig].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, KV, G, hd] — single new token
+    cache_k: jax.Array,  # [B, T, KV, hd] (post-RoPE keys)
+    cache_v: jax.Array,  # [B, T, KV, hd]
+    pos: jax.Array,  # scalar: index of the new token
+) -> jax.Array:
+    t = cache_k.shape[1]
+    scale = np.float32(1.0 / np.sqrt(q.shape[-1]))
+    logits = (
+        jnp.einsum("bkgd,bskd->bkgs", q, cache_k).astype(jnp.float32) * scale
+    )
+    valid = jnp.arange(t) <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(cache_v.dtype), cache_v)
+    return out.astype(q.dtype)

@@ -1,0 +1,131 @@
+"""xDeepFM (CIN + DNN + linear) with sharded embedding tables.
+
+The embedding lookup is the hot path: JAX has no EmbeddingBag, so it is
+built from ``jnp.take`` + ``jax.ops.segment_sum`` over a flat
+offset-indexed table (DESIGN.md §4) — the same gather/segment substrate as
+the MSF engine. The table rows shard over the ``model`` axis; batch shards
+over dp. ``retrieval`` scores one query against 10⁶ candidates with a
+sharded batched dot + top-k (no loops).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+
+
+def field_offsets(cfg: RecsysConfig) -> np.ndarray:
+    """Per-field row offsets into the single flat embedding table. Field
+    vocab sizes follow a Criteo-like power-law split of total_vocab; the
+    largest field absorbs rounding so offsets+sizes never exceed the table."""
+    raw = np.logspace(0, 6, cfg.n_sparse)
+    sizes = np.maximum((raw / raw.sum() * cfg.total_vocab).astype(np.int64), 4)
+    overflow = sizes.sum() - cfg.total_vocab
+    if overflow > 0:
+        sizes[-1] -= overflow
+        assert sizes[-1] >= 4, "total_vocab too small for n_sparse fields"
+    return np.concatenate([[0], np.cumsum(sizes)])[:-1], sizes
+
+
+def init_xdeepfm(rng, cfg: RecsysConfig) -> Dict[str, Any]:
+    keys = jax.random.split(rng, 8 + 2 * len(cfg.cin_layers) + 2 * len(cfg.mlp_layers))
+    f, d = cfg.n_sparse, cfg.embed_dim
+    params: Dict[str, Any] = {
+        "table": jax.random.normal(keys[0], (cfg.total_vocab, d)) * 0.01,
+        "lin_table": jax.random.normal(keys[1], (cfg.total_vocab, 1)) * 0.01,
+        "bias": jnp.zeros(()),
+    }
+    h_prev = f
+    ki = 2
+    for i, h in enumerate(cfg.cin_layers):
+        params[f"cin_w{i}"] = jax.random.normal(keys[ki], (h_prev, f, h)) * math.sqrt(
+            2.0 / (h_prev * f)
+        )
+        ki += 1
+        h_prev = h
+    params["cin_out"] = jax.random.normal(keys[ki], (sum(cfg.cin_layers), 1)) * 0.1
+    ki += 1
+    dims = [f * d] + list(cfg.mlp_layers) + [1]
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"mlp_w{i}"] = jax.random.normal(keys[ki], (a, b)) * math.sqrt(2.0 / a)
+        params[f"mlp_b{i}"] = jnp.zeros((b,))
+        ki += 1
+    return params
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """ids [B, F] (absolute row ids) → [B, F, d]. For multi-hot bags the
+    same op runs on flattened (bag_ids, segment_sum) — exposed for reuse.
+    mode="clip": jnp.take's default OOB mode is 'fill' (NaN for floats) —
+    a single corrupt id must never poison a training step."""
+    return jnp.take(table, ids, axis=0, mode="clip")
+
+
+def embedding_bag_multihot(
+    table: jax.Array, flat_ids: jax.Array, bag_ids: jax.Array, n_bags: int
+) -> jax.Array:
+    """EmbeddingBag(sum): gather + segment-sum (the torch-parity op)."""
+    rows = jnp.take(table, flat_ids, axis=0, mode='clip')
+    return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+
+
+def _cin(params, x0: jax.Array, cfg: RecsysConfig) -> jax.Array:
+    """Compressed Interaction Network. x0 [B, F, D]."""
+    b, f, d = x0.shape
+    xk = x0
+    pooled = []
+    for i, h in enumerate(cfg.cin_layers):
+        # outer product along field dims, compressed by conv weights
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)  # [B, Hk, F, D]
+        xk = jnp.einsum("bhmd,hmn->bnd", z, params[f"cin_w{i}"])  # [B, H, D]
+        pooled.append(xk.sum(-1))  # [B, H]
+    p = jnp.concatenate(pooled, axis=-1)  # [B, sum(H)]
+    return p @ params["cin_out"]  # [B, 1]
+
+
+def xdeepfm_logits(params, ids: jax.Array, cfg: RecsysConfig) -> jax.Array:
+    """ids [B, F] absolute row indices → logits [B]."""
+    emb = embedding_bag(params["table"], ids)  # [B, F, D]
+    lin = embedding_bag(params["lin_table"], ids)[..., 0].sum(-1)  # [B]
+    cin = _cin(params, emb, cfg)[..., 0]
+    h = emb.reshape(emb.shape[0], -1)
+    n_mlp = len(cfg.mlp_layers) + 1
+    for i in range(n_mlp):
+        h = h @ params[f"mlp_w{i}"] + params[f"mlp_b{i}"]
+        if i < n_mlp - 1:
+            h = jax.nn.relu(h)
+    return lin + cin + h[..., 0] + params["bias"]
+
+
+def xdeepfm_loss(params, ids, labels, cfg: RecsysConfig) -> jax.Array:
+    logits = xdeepfm_logits(params, ids, cfg)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+# ---------------------------------------------------------------------------
+# retrieval: 1 query vs n_candidates, sharded dot + top-k
+# ---------------------------------------------------------------------------
+
+def init_retrieval(rng, cfg: RecsysConfig, n_candidates: int) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    f, d, r = cfg.n_sparse, cfg.embed_dim, cfg.retrieval_dim
+    return {
+        "table": jax.random.normal(k1, (cfg.total_vocab, d)) * 0.01,
+        "tower_w": jax.random.normal(k2, (f * d, r)) * math.sqrt(2.0 / (f * d)),
+        "items": jax.random.normal(k3, (n_candidates, r)) * 0.1,
+    }
+
+
+def retrieval_topk(params, ids: jax.Array, cfg: RecsysConfig, k: int = 100):
+    """ids [B, F] (user features) → (scores [B, k], indices [B, k])."""
+    emb = embedding_bag(params["table"], ids).reshape(ids.shape[0], -1)
+    u = emb @ params["tower_w"]  # [B, r]
+    scores = u @ params["items"].T  # [B, n_candidates]
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw_init, adamw_update, cosine_lr
+from repro.optim.compress import compress_with_error_feedback, init_error_state

@@ -1,0 +1,74 @@
+"""AdamW with global-norm clipping and fp32 master statistics.
+
+Optimizer states inherit the parameter sharding specs (ZeRO-1 by
+construction under FSDP; with ``fsdp=False`` states follow the TP layout).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(
+        mu=zeros,
+        nu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        u = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (u + weight_decay * p32)
+        return p_new.astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    params_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    mu_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    nu_new = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return params_new, AdamWState(mu=mu_new, nu=nu_new, step=step), gnorm
+
+
+def cosine_lr(step, *, peak: float, warmup: int, total: int, floor_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

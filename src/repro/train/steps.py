@@ -1,0 +1,156 @@
+"""Train / serve step factories for every architecture family.
+
+These are the functions the dry-run lowers and the launcher executes:
+full train steps (fwd + bwd + AdamW + LR schedule, optional gradient
+compression), prefill/decode serve steps, and recsys serving/retrieval.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+from repro.models import gnn as G
+from repro.models import recsys as R
+from repro.models import transformer as T
+from repro.optim.adamw import adamw_update, cosine_lr
+from repro.optim.compress import compress_with_error_feedback
+
+LR = dict(peak=3e-4, warmup=100, total=10000)
+
+
+def _apply_opt(params, opt_state, grads, step, *, compress=False, err_state=None):
+    lr = cosine_lr(step, **LR)
+    if compress:
+        grads, err_state = compress_with_error_feedback(grads, err_state)
+    params, opt_state, gnorm = adamw_update(grads, opt_state, params, lr)
+    return params, opt_state, gnorm, err_state
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_loss_and_grad(params, tokens, labels, cfg: LMConfig, mesh, *,
+                     triangle_skip: bool | None = None):
+    """Loss+grad with optional microbatch gradient accumulation
+    (``cfg.grad_accum``): each microbatch's activations live only for its
+    own fwd+bwd, dividing activation-stack memory by the accumulation
+    factor while keeping the global batch (the lever that fits kimi-k2
+    train on fewer chips — §Perf)."""
+    tskip = cfg.triangle_skip if triangle_skip is None else triangle_skip
+
+    def loss_fn(p, t, l):
+        x = T.lm_forward(p, t, cfg, mesh, triangle_skip=tskip)
+        return T.softmax_xent(x, p["unembed"], l, cfg)
+
+    k = cfg.grad_accum
+    if k <= 1:
+        return jax.value_and_grad(loss_fn)(params, tokens, labels)
+    b = tokens.shape[0]
+    assert b % k == 0, (b, k)
+    tks = tokens.reshape(k, b // k, -1)
+    lbs = labels.reshape(k, b // k, -1)
+
+    def mb(carry, inp):
+        g_acc, loss_acc = carry
+        t, l = inp
+        loss, g = jax.value_and_grad(loss_fn)(params, t, l)
+        g_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+        return (g_acc, loss_acc + loss), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss), _ = jax.lax.scan(mb, (g0, jnp.float32(0.0)), (tks, lbs))
+    inv = 1.0 / k
+    grads = jax.tree.map(lambda g: g * inv, grads)
+    return loss * inv, grads
+
+
+def lm_train_step(params, opt_state, tokens, labels, cfg: LMConfig, mesh):
+    loss, grads = lm_loss_and_grad(params, tokens, labels, cfg, mesh)
+    params, opt_state, gnorm, _ = _apply_opt(params, opt_state, grads, opt_state.step)
+    return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+
+def lm_prefill_step(params, tokens, cfg: LMConfig, mesh):
+    logits, cache = T.lm_prefill(params, tokens, cfg, mesh)
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, cache
+
+
+def lm_decode_step(params, token, cache, pos, cfg: LMConfig, mesh):
+    logits, cache = T.lm_decode_step(params, token, cache, pos, cfg, mesh)
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, cache
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_apply(params, batch: Dict[str, Any], cfg: GNNConfig, n_graphs: int = 1):
+    if cfg.kind == "gat":
+        return G.apply_gat(params, batch["x"], batch["src"], batch["dst"],
+                           batch["edge_valid"], cfg)
+    if cfg.kind == "meshgraphnet":
+        return G.apply_meshgraphnet(params, batch["x"], batch["e_feat"], batch["src"],
+                                    batch["dst"], batch["edge_valid"], cfg)
+    if cfg.kind == "gatedgcn":
+        return G.apply_gatedgcn(params, batch["x"], batch["e_feat"], batch["src"],
+                                batch["dst"], batch["edge_valid"], cfg)
+    if cfg.kind == "nequip":
+        return G.apply_nequip(params, batch["species"], batch["pos"], batch["src"],
+                              batch["dst"], batch["edge_valid"], batch["graph_ids"],
+                              n_graphs, cfg)
+    raise ValueError(cfg.kind)
+
+
+def gnn_loss(params, batch, cfg: GNNConfig, n_graphs: int = 1):
+    if cfg.kind == "nequip":
+        energy = gnn_apply(params, batch, cfg, n_graphs)
+        loss = jnp.mean((energy - batch["energy"]) ** 2)
+        if cfg.predict_forces:
+            def e_of_pos(pos):
+                return gnn_apply(params, dict(batch, pos=pos), cfg, n_graphs).sum()
+            forces = -jax.grad(e_of_pos)(batch["pos"])
+            loss = loss + jnp.mean((forces - batch["forces"]) ** 2)
+        return loss
+    out = gnn_apply(params, batch, cfg)
+    mask = batch.get("node_mask")
+    if cfg.n_classes:
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+        if mask is not None:
+            return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1)
+        return jnp.mean(nll)
+    err = (out - batch["targets"]) ** 2
+    if mask is not None:
+        return jnp.sum(err * mask[:, None]) / jnp.maximum(mask.sum() * err.shape[-1], 1)
+    return jnp.mean(err)
+
+
+def gnn_train_step(params, opt_state, batch, cfg: GNNConfig, n_graphs: int = 1):
+    loss, grads = jax.value_and_grad(gnn_loss)(params, batch, cfg, n_graphs)
+    params, opt_state, gnorm, _ = _apply_opt(params, opt_state, grads, opt_state.step)
+    return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# recsys
+# ---------------------------------------------------------------------------
+
+def recsys_train_step(params, opt_state, ids, labels, cfg: RecsysConfig):
+    loss, grads = jax.value_and_grad(R.xdeepfm_loss)(params, ids, labels, cfg)
+    params, opt_state, gnorm, _ = _apply_opt(params, opt_state, grads, opt_state.step)
+    return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+
+def recsys_serve_step(params, ids, cfg: RecsysConfig):
+    return jax.nn.sigmoid(R.xdeepfm_logits(params, ids, cfg))
+
+
+def recsys_retrieval_step(params, ids, cfg: RecsysConfig, k: int = 100):
+    return R.retrieval_topk(params, ids, cfg, k=k)

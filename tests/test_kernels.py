@@ -1,0 +1,78 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
++ cross-check against the core (non-Pallas) implementation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.multilinear import min_outgoing_dense
+from repro.core.semiring import pack32
+from repro.kernels import ops, ref
+
+
+def _random_dense(n, m, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    a = np.full((n, n), np.inf, dtype)
+    u, v = rng.integers(0, n, m), rng.integers(0, n, m)
+    w = rng.integers(1, 256, m).astype(dtype)
+    a[u, v] = np.minimum(a[u, v], w)
+    np.fill_diagonal(a, np.inf)
+    p = rng.integers(0, max(1, n // 3), n).astype(np.int32)
+    return p, a
+
+
+@pytest.mark.parametrize("n", [8, 100, 128, 257, 384])
+@pytest.mark.parametrize("blocks", [(8, 128), (128, 128), (64, 256)])
+def test_multilinear_dense_kernel_sweep(n, blocks):
+    p, a = _random_dense(n, 4 * n, seed=n)
+    bi, bj = blocks
+    got = ops.multilinear_dense(jnp.array(p), jnp.array(a), block_i=bi, block_j=bj)
+    want = ref.multilinear_dense_ref(jnp.array(p), jnp.array(a))
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_multilinear_dense_kernel_vs_core():
+    """Kernel output == the core library's dense multilinear (EdgeMin)."""
+    p, a = _random_dense(96, 300, seed=5)
+    minw, mincol, minpay = ops.multilinear_dense(jnp.array(p), jnp.array(a))
+    em = min_outgoing_dense(jnp.array(p), jnp.array(a))
+    np.testing.assert_array_equal(np.asarray(minw), np.asarray(em.w))
+    np.testing.assert_array_equal(np.asarray(mincol), np.asarray(em.eid))
+    np.testing.assert_array_equal(np.asarray(minpay), np.asarray(em.payload[0]))
+
+
+@pytest.mark.parametrize("n,e", [(128, 0), (128, 500), (300, 2000), (1024, 10000)])
+def test_segment_min_bucketed_sweep(n, e):
+    rng = np.random.default_rng(e + n)
+    seg = rng.integers(0, n, e)
+    keys = np.asarray(
+        pack32(jnp.array(rng.integers(1, 256, e)), jnp.array(rng.integers(0, 1 << 20, e)))
+    ).astype(np.uint32)
+    kb, rb = ops.bucket_edges_by_row_block(seg, keys, n, 128)
+    got = np.asarray(ops.segment_min_bucketed(jnp.array(kb), jnp.array(rb)))
+    want = np.asarray(ref.segment_min_bucketed_ref(jnp.array(kb), jnp.array(rb), 128))
+    np.testing.assert_array_equal(got, want)
+    direct = np.full(kb.shape[0] * 128, 0xFFFFFFFF, np.uint64)
+    if e:
+        np.minimum.at(direct, seg, keys.astype(np.uint64))
+    np.testing.assert_array_equal(got.astype(np.uint64), direct)
+
+
+def test_kernel_full_msf_hook_step():
+    """One hooking step computed by the Pallas kernel agrees with the COO
+    path used by the MSF driver."""
+    from repro.core.multilinear import min_outgoing_coo
+    from repro.graphs import random_graph
+
+    g = random_graph(64, 200, seed=9)
+    p = jnp.arange(64, dtype=jnp.int32)
+    em = min_outgoing_coo(p, g.src, g.dst, g.w, g.eid, g.valid, 64, segment="vertex")
+    # dense adjacency with the same tie-breaking: eid == column order differs,
+    # so compare weights only (argmin weight is unique per (w, col) lex on
+    # distinct (w, eid) inputs when weights are distinct per row pair)
+    a = np.full((64, 64), np.inf, np.float32)
+    src, dst, w = np.asarray(g.src), np.asarray(g.dst), np.asarray(g.w)
+    for s, d, ww in zip(src, dst, w):
+        a[s, d] = min(a[s, d], ww)
+    minw, _, _ = ops.multilinear_dense(p, jnp.array(a))
+    np.testing.assert_allclose(np.asarray(minw), np.asarray(em.w))

@@ -1,0 +1,92 @@
+"""Per-LM-arch smoke tests (reduced same-family configs): one train step on
+CPU asserting shapes + no NaNs, prefill/decode parity, loss-path parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as T
+
+LM_ARCHS = [a for a in registry.arch_ids() if registry.family_of(a) == "lm"]
+
+
+def _data(cfg, b=2, s=32):
+    toks = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab)
+    labels = jax.random.randint(jax.random.key(2), (b, s), 0, cfg.vocab)
+    return toks, labels
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_train_step(arch, host_mesh):
+    cfg = registry.get_config(arch, smoke=True)
+    params = T.init_lm(jax.random.key(0), cfg)
+    toks, labels = _data(cfg)
+    loss, grads = jax.jit(
+        lambda p, t, l: jax.value_and_grad(T.lm_loss)(p, t, l, cfg, host_mesh)
+    )(params, toks, labels)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(not bool(jnp.isnan(g).any()) for g in flat)
+    # shapes preserved through the optimizer
+    from repro.optim.adamw import adamw_init, adamw_update
+
+    opt = adamw_init(params)
+    p2, opt2, gnorm = adamw_update(grads, opt, params, jnp.float32(1e-3))
+    assert jax.tree.structure(p2) == jax.tree.structure(params)
+    assert not bool(jnp.isnan(gnorm))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_prefill_decode_parity(arch, host_mesh):
+    """Last-token logits from a full prefill == decode of the last token on
+    a cache prefilled with the S-1 prefix."""
+    cfg = registry.get_config(arch, smoke=True)
+    params = T.init_lm(jax.random.key(0), cfg)
+    toks, _ = _data(cfg, b=2, s=32)
+    prefill = jax.jit(lambda p, t: T.lm_prefill(p, t, cfg, host_mesh))
+    decode = jax.jit(lambda p, tok, c, pos: T.lm_decode_step(p, tok, c, pos, cfg, host_mesh))
+    logits_full, _ = prefill(params, toks)
+    _, cache = prefill(params, toks[:, :-1])
+    want_t = cfg.sliding_window or 32
+    t_have = cache["k"].shape[2]
+    if t_have < min(want_t, 32):
+        pad = min(want_t, 32) - t_have
+        cache = {k: jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) for k, v in cache.items()}
+    logits_dec, _ = decode(params, toks[:, -1], cache, jnp.int32(31))
+    err = float(jnp.max(jnp.abs(logits_full - logits_dec)))
+    assert err < 3e-2, err  # bf16 path noise
+
+
+def test_vocab_chunked_loss_parity(host_mesh):
+    cfg = registry.get_config("qwen2-7b", smoke=True)
+    params = T.init_lm(jax.random.key(0), cfg)
+    toks, labels = _data(cfg)
+    base = T.lm_loss(params, toks, labels, cfg, host_mesh)
+    cfgc = dataclasses.replace(cfg, vocab_chunk=128)
+    chunked = T.lm_loss(params, toks, labels, cfgc, host_mesh)
+    assert abs(float(base) - float(chunked)) < 1e-4
+
+
+def test_triangle_skip_parity(host_mesh):
+    cfg = registry.get_config("command-r-35b", smoke=True)
+    params = T.init_lm(jax.random.key(0), cfg)
+    toks, labels = _data(cfg, s=64)
+    x1 = T.lm_forward(params, toks, cfg, host_mesh, triangle_skip=False)
+    x2 = T.lm_forward(params, toks, cfg, host_mesh, triangle_skip=True)
+    assert float(jnp.max(jnp.abs(x1.astype(jnp.float32) - x2.astype(jnp.float32)))) < 1e-2
+
+
+def test_param_count_matches_init():
+    """Analytic param_count (used for 6ND roofline) == actual init size."""
+    for arch in LM_ARCHS:
+        cfg = registry.get_config(arch, smoke=True)
+        params = jax.eval_shape(lambda k: T.init_lm(k, cfg), jax.random.key(0))
+        total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        assert abs(total - analytic) / total < 0.02, (arch, total, analytic)
+
+
+import numpy as np  # noqa: E402

@@ -1,0 +1,85 @@
+"""MINWEIGHT monoid machinery: segment/axis argmin vs numpy, pack32,
+binary-combine consistency (hypothesis property tests)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.semiring import (
+    EdgeMin,
+    combine_edgemin,
+    pack32,
+    segment_argmin,
+    unpack32,
+)
+
+IMAX = np.iinfo(np.int32).max
+
+
+def _np_argmin(w, eid, pay, seg, n, valid):
+    minw = np.full(n, np.inf, np.float32)
+    mineid = np.full(n, IMAX, np.int64)
+    minpay = np.full(n, IMAX, np.int64)
+    for i in range(len(w)):
+        if not valid[i]:
+            continue
+        s = seg[i]
+        key = (w[i], eid[i])
+        if (minw[s], mineid[s]) > key:
+            minw[s], mineid[s], minpay[s] = w[i], eid[i], pay[i]
+    return minw, mineid, minpay
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 20),
+    e=st.integers(0, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_segment_argmin_matches_numpy(n, e, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(1, 50, e).astype(np.float32)  # ties likely
+    eid = rng.permutation(e).astype(np.int32)  # distinct tie-break
+    pay = rng.integers(0, 1000, e).astype(np.int32)
+    seg = rng.integers(0, n, e).astype(np.int32)
+    valid = rng.random(e) < 0.8
+    got = segment_argmin(
+        jnp.array(w), jnp.array(eid), (jnp.array(pay),), jnp.array(seg), n,
+        valid=jnp.array(valid),
+    )
+    want = _np_argmin(w, eid, pay, seg, n, valid)
+    np.testing.assert_array_equal(np.asarray(got.w), want[0])
+    np.testing.assert_array_equal(np.asarray(got.eid), want[1].astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(got.payload[0]), want[2].astype(np.int32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    w=st.integers(0, 255),
+    idx=st.integers(0, (1 << 24) - 1),
+)
+def test_pack32_roundtrip_and_order(w, idx):
+    k = pack32(jnp.uint32(w), jnp.uint32(idx))
+    w2, i2 = unpack32(k)
+    assert int(w2) == w and int(i2) == idx
+    # order: packing is monotone in (w, idx) lex order
+    k2 = pack32(jnp.uint32(min(w + 1, 255)), jnp.uint32(0))
+    if w < 255:
+        assert int(k) < int(k2)
+
+
+def test_combine_edgemin_matches_joint_reduction():
+    rng = np.random.default_rng(0)
+    n = 16
+    mk = lambda: EdgeMin(
+        w=jnp.array(np.where(rng.random(n) < 0.3, np.inf, rng.integers(1, 9, n)).astype(np.float32)),
+        eid=jnp.array(rng.permutation(1000)[:n].astype(np.int32)),
+        payload=(jnp.array(rng.integers(0, 99, n).astype(np.int32)),),
+    )
+    a, b = mk(), mk()
+    c = combine_edgemin(a, b)
+    # elementwise: c must equal whichever of (a, b) has the lex-smaller key
+    for i in range(n):
+        ka = (float(a.w[i]), int(a.eid[i]))
+        kb = (float(b.w[i]), int(b.eid[i]))
+        kc = (float(c.w[i]), int(c.eid[i]))
+        assert kc == min(ka, kb)

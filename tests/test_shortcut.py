@@ -1,0 +1,75 @@
+"""Shortcutting strategies: all turn forests into stars; CSP == complete on
+the same input; OS threshold behavior; sub-iteration counting."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import shortcut as sc
+
+
+def _random_forest(n, seed):
+    """Random parent forest (acyclic, roots self-loop)."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    p = np.zeros(n, np.int32)
+    p[order[0]] = order[0]
+    for i in range(1, n):
+        # parent is some earlier vertex in the order (acyclic by construction)
+        p[order[i]] = order[rng.integers(0, i)]
+    return jnp.array(p)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_complete_shortcut_makes_stars(seed):
+    p = _random_forest(200, seed)
+    q = sc.complete_shortcut(p)
+    assert bool(jnp.all(q == q[q]))
+    # root of every vertex is preserved
+    def root(p, i):
+        i = int(i)
+        while int(p[i]) != i:
+            i = int(p[i])
+        return i
+    pn = np.asarray(p)
+    qn = np.asarray(q)
+    for i in range(0, 200, 17):
+        assert qn[i] == root(pn, i)
+
+
+@pytest.mark.parametrize("capacity", [4, 64, 1024])
+def test_csp_equals_complete(capacity):
+    """CSP (with its fallback) must produce exactly complete_shortcut's
+    result, for any changed-set size vs capacity."""
+    rng = np.random.default_rng(7)
+    n = 300
+    p_prev = jnp.arange(n, dtype=jnp.int32)  # all stars (identity forest)
+    # hook a random subset of roots onto other roots, acyclically
+    order = rng.permutation(n)
+    p = np.arange(n, dtype=np.int32)
+    for i in range(1, n // 2):
+        p[order[i]] = order[rng.integers(0, i)]
+    p = jnp.array(p)
+    want = sc.complete_shortcut(p)
+    got_csp = sc.csp_shortcut(p, p_prev, capacity)
+    got_os = sc.optimized_shortcut(p, p_prev, capacity)
+    np.testing.assert_array_equal(np.asarray(got_csp), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_os), np.asarray(want))
+
+
+def test_subiteration_count_log_bound():
+    # a path graph compressed by pointer doubling: ceil(log2(depth)) rounds
+    n = 257
+    p = jnp.array([max(0, i - 1) for i in range(n)], jnp.int32)
+    q, k = sc.count_shortcut_subiters(p)
+    assert bool(jnp.all(q == 0))
+    assert int(k) <= int(np.ceil(np.log2(n))) + 1
+
+
+def test_build_changed_overflow_flag():
+    p_prev = jnp.arange(100, dtype=jnp.int32)
+    p = jnp.where(jnp.arange(100) < 50, jnp.int32(99), jnp.arange(100, dtype=jnp.int32))
+    ids, vals, count, overflow = sc.build_changed(p, p_prev, 16)
+    assert int(count) == 50 - 1 + 1  # vertices 0..49 changed except 99? -> 50
+    assert bool(overflow)
+    ids2, vals2, count2, overflow2 = sc.build_changed(p, p_prev, 64)
+    assert not bool(overflow2)

@@ -1,0 +1,35 @@
+"""Algebraic Bellman-Ford (paper §II-B) vs scipy shortest path."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sssp import sssp
+from repro.graphs import random_graph, grid_road_graph
+from repro.graphs.structures import from_edges
+
+
+def _oracle(g, source):
+    import scipy.sparse as sp
+    import scipy.sparse.csgraph as csg
+
+    src, dst, w = np.asarray(g.src), np.asarray(g.dst), np.asarray(g.w)
+    v = np.asarray(g.valid)
+    a = sp.coo_matrix((w[v], (src[v], dst[v])), shape=(g.n, g.n)).tocsr()
+    return csg.shortest_path(a, directed=False, indices=source)
+
+
+@pytest.mark.parametrize("g", [random_graph(150, 500, seed=1), grid_road_graph(10, 12, seed=2)],
+                         ids=["random", "grid"])
+def test_sssp_matches_scipy(g):
+    d, it = sssp(g, 0)
+    np.testing.assert_allclose(np.asarray(d), _oracle(g, 0), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 40), m=st.integers(0, 100), seed=st.integers(0, 2**31 - 1))
+def test_sssp_property(n, m, seed):
+    rng = np.random.default_rng(seed)
+    g = from_edges(rng.integers(0, n, m), rng.integers(0, n, m),
+                   rng.integers(1, 256, m).astype(np.float64), n)
+    d, _ = sssp(g, 0)
+    np.testing.assert_allclose(np.asarray(d), _oracle(g, 0), rtol=1e-6)
