@@ -1,0 +1,86 @@
+"""Streaming MSF engine vs full recompute, plus batched query throughput.
+
+Rows:
+- ``stream_insert_*``    — median latency of one ``insert_batch`` (the
+  sparsification path: MSF over ≤ (n−1) + B padded union edges);
+- ``stream_recompute_*`` — full ``msf()`` over the accumulated edge set at
+  the same point in the stream (what the seed had to do per update);
+- ``stream_queries_*``   — fused snapshot-gather query throughput.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core.msf import msf
+from repro.graphs.generators import rmat_graph
+from repro.graphs.structures import from_edges
+from repro.launch.serve_graph import undirected_edges
+from repro.stream import QueryService, StreamingMSF
+
+SCALE = 14
+EDGE_FACTOR = 8
+BATCH = 2048
+QUERY_BATCH = 1 << 14
+
+
+def run_rows():
+    n = 1 << SCALE
+    g_full = rmat_graph(SCALE, EDGE_FACTOR, seed=9)
+    lo, hi, w = undirected_edges(g_full)
+    rng = np.random.default_rng(9)
+    perm = rng.permutation(len(lo))
+    lo, hi, w = lo[perm], hi[perm], w[perm]
+
+    engine = StreamingMSF(n, batch_capacity=BATCH)
+    service = QueryService(engine.snapshots, max_batch=QUERY_BATCH)
+
+    # Stream everything in; time the steady-state tail batches.
+    n_batches = len(lo) // BATCH
+    lats = []
+    for k in range(n_batches):
+        sl = slice(k * BATCH, (k + 1) * BATCH)
+        t0 = time.perf_counter()
+        engine.insert_batch(lo[sl], hi[sl], w[sl])
+        lats.append(time.perf_counter() - t0)
+    t_insert = float(np.median(lats[max(1, n_batches // 2):]))
+
+    # Full recompute over the same accumulated edge set (seed behaviour).
+    m_seen = n_batches * BATCH
+    g_acc = from_edges(lo[:m_seen], hi[:m_seen], w[:m_seen].astype(np.float64), n)
+    t_full = timeit(lambda: msf(g_acc), iters=2)
+
+    name = f"rmat_s{SCALE}_e{EDGE_FACTOR}_b{BATCH}"
+    out = [
+        row(
+            f"stream_insert_{name}",
+            t_insert * 1e6,
+            f"union_edges={engine.last_union_shape[0]};"
+            f"updates_per_s={1.0 / t_insert:.1f};"
+            f"edges_per_s={BATCH / t_insert:.0f}",
+        ),
+        row(
+            f"stream_recompute_{name}",
+            t_full * 1e6,
+            f"edges={g_acc.num_directed_edges};"
+            f"speedup_vs_stream={t_full / t_insert:.1f}x",
+        ),
+    ]
+
+    qu = rng.integers(0, n, QUERY_BATCH)
+    qv = rng.integers(0, n, QUERY_BATCH)
+    t_q = timeit(lambda: service.connected(qu, qv), iters=3)
+    out.append(
+        row(
+            f"stream_queries_{name}",
+            t_q * 1e6,
+            f"batch={QUERY_BATCH};queries_per_s={QUERY_BATCH / t_q:.0f}",
+        )
+    )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run_rows()))

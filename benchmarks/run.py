@@ -12,6 +12,7 @@ def main() -> None:
         bench_graph_suite,
         bench_multilinear,
         bench_shortcut,
+        bench_stream,
         bench_strong_scaling,
         bench_weak_scaling,
     )
@@ -22,6 +23,7 @@ def main() -> None:
         ("fig7-weak-scaling", bench_weak_scaling),
         ("fig8-multilinear-vs-pairwise", bench_multilinear),
         ("table1-graph-suite", bench_graph_suite),
+        ("stream-msf-serving", bench_stream),
     ]
     print("name,us_per_call,derived")
     for label, mod in mods:

@@ -92,6 +92,7 @@ def _record_edges(msf_eids, n_f, keep, r_eid):
 def msf(
     graph: Graph,
     *,
+    parent0: jax.Array | None = None,
     variant: str = "complete",
     shortcut: str = "complete",
     capacity: int = 1 << 16,
@@ -102,10 +103,23 @@ def msf(
 
     variant: "complete" | "paper" | "pairwise"
     shortcut (complete variant only): "complete" | "csp" | "os"
+    parent0: optional warm-start parent vector — the re-entrant form for
+      callers that maintain their own component labels (e.g. an incremental
+      connectivity refresh). Hooking starts from these components instead
+      of singletons, so the returned ``weight``/``msf_eids`` cover only the
+      edges hooked *during this call*. Note the streaming engine's
+      ``insert_batch`` deliberately starts cold: a warm start cannot evict
+      a heavier pre-existing forest edge from a cycle (DESIGN.md §6.1).
+      Any forest labeling works — it is canonicalized to stars first.
     """
     n = graph.n
     src, dst, w, eid, valid = graph.src, graph.dst, graph.w, graph.eid, graph.valid
-    p0 = jnp.arange(n, dtype=jnp.int32)
+    if parent0 is None:
+        p0 = jnp.arange(n, dtype=jnp.int32)
+    else:
+        # Canonicalize: the hooking kernels rely on the every-tree-a-star
+        # invariant at the top of each iteration.
+        p0 = sc.complete_shortcut(parent0.astype(jnp.int32))
     limit = jnp.int32(max_iters if max_iters is not None else 2 * int(n).bit_length() + 8)
 
     shortcut_fn = sc.make_shortcut_fn(shortcut, capacity) if variant != "paper" else None
@@ -172,10 +186,7 @@ def msf(
         jnp.bool_(False),
     )
     p, total, msf_eids, n_f, it, _ = jax.lax.while_loop(cond, body, init)
-    if variant != "paper":
-        p = sc.complete_shortcut(p)  # canonical labels (already stars; no-op)
-    else:
-        p = sc.complete_shortcut(p)
+    p = sc.complete_shortcut(p)  # canonical labels (complete variant: no-op)
     return MSFResult(weight=total, parent=p, msf_eids=msf_eids, n_msf_edges=n_f, iterations=it)
 
 

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.multilinear import min_outgoing_2d, min_outgoing_2d_packed
 from repro.core.semiring import INF, IMAX
 from repro.graphs.partition import Partition2D
@@ -211,7 +212,7 @@ def msf_distributed(
     flat_axes = (
         tuple(row_axis) if isinstance(row_axis, tuple) else (row_axis,)
     ) + (col_axis,)
-    mapped = jax.shard_map(
+    mapped = shard_map(
         run,
         mesh=mesh,
         in_specs=(specs_edges,) * 5 + (P(flat_axes),),

@@ -1,4 +1,11 @@
-from repro.graphs.structures import Graph, from_edges, to_csr
+from repro.graphs.structures import (
+    Graph,
+    canonical_edges,
+    dedupe_canonical,
+    edge_keys,
+    from_edges,
+    to_csr,
+)
 from repro.graphs.generators import (
     random_graph,
     rmat_graph,

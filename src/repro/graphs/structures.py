@@ -54,6 +54,50 @@ class Graph:
         )
 
 
+def canonical_edges(u, v):
+    """Canonical undirected endpoint order: (lo, hi, keep) with lo < hi.
+
+    ``keep`` masks out self-loops. Works on numpy and jax arrays alike
+    (elementwise min/max/compare only).
+    """
+    xp = np
+    if not isinstance(u, np.ndarray):  # jax inputs: stay on device
+        import jax.numpy as jnp
+
+        xp = jnp
+    lo, hi = xp.minimum(u, v), xp.maximum(u, v)
+    return lo, hi, lo != hi
+
+
+def edge_keys(lo, hi, n: int) -> np.ndarray:
+    """Collision-free int64 key ``lo * n + hi`` for canonical (lo < hi) pairs.
+
+    Host-side (int64) form — the streaming delta layer packs the same key
+    into uint32 for its on-device sorted-lookup when n ≤ 2^16
+    (``repro.stream.delta``).
+    """
+    lo = np.asarray(lo, np.int64)
+    hi = np.asarray(hi, np.int64)
+    return lo * np.int64(n) + hi
+
+
+def dedupe_canonical(lo, hi, w, n: int):
+    """Collapse duplicate canonical pairs, keeping the smallest weight
+    (ties: smallest original index) — the same policy as ``from_edges``.
+
+    Returns (lo, hi, w) host arrays sorted by key with one entry per pair.
+    """
+    lo = np.asarray(lo, np.int64)
+    hi = np.asarray(hi, np.int64)
+    w = np.asarray(w, np.float64)
+    key = edge_keys(lo, hi, n)
+    order = np.lexsort((w, key))
+    key, lo, hi, w = key[order], lo[order], hi[order], w[order]
+    first = np.ones(len(key), bool)
+    first[1:] = key[1:] != key[:-1]
+    return lo[first], hi[first], w[first]
+
+
 def from_edges(u: np.ndarray, v: np.ndarray, w: np.ndarray, n: int) -> Graph:
     """Build a symmetric ``Graph`` from one direction of each undirected edge.
 
@@ -63,16 +107,8 @@ def from_edges(u: np.ndarray, v: np.ndarray, w: np.ndarray, n: int) -> Graph:
     u = np.asarray(u, np.int64)
     v = np.asarray(v, np.int64)
     w = np.asarray(w, np.float64)
-    keep = u != v
-    u, v, w = u[keep], v[keep], w[keep]
-    lo, hi = np.minimum(u, v), np.maximum(u, v)
-    # Dedupe undirected pairs: sort by (lo, hi, w) and keep first of each pair.
-    key = lo * n + hi
-    order = np.lexsort((w, key))
-    key, lo, hi, w = key[order], lo[order], hi[order], w[order]
-    first = np.ones(len(key), bool)
-    first[1:] = key[1:] != key[:-1]
-    lo, hi, w = lo[first], hi[first], w[first]
+    lo, hi, keep = canonical_edges(u, v)
+    lo, hi, w = dedupe_canonical(lo[keep], hi[keep], w[keep], n)
     m = len(lo)
     eid = np.arange(m, dtype=np.int32)
     src = np.concatenate([lo, hi]).astype(np.int32)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import optimization_barrier, shard_map
 from repro.configs.base import LMConfig
 from repro.models.layers import decode_attention, flash_attention, rms_norm, rope
 
@@ -223,7 +224,7 @@ def moe_block(x: jax.Array, lp: Dict[str, jax.Array], cfg: LMConfig, mesh) -> ja
         out = jax.lax.psum(out, "model")
         return out.reshape(x_loc.shape)
 
-    out = jax.shard_map(
+    out = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(x_spec, P(None, None)) + especs,
@@ -322,7 +323,7 @@ def lm_forward(params, tokens, cfg: LMConfig, mesh, *, triangle_skip=False):
         # the saved activation out of the backward loop, materializing the
         # whole [L, B, S, d] stack in f32 (2× remat memory; 107 GiB for
         # kimi-k2). The barrier pins the convert inside the loop body.
-        x = jax.lax.optimization_barrier(x)
+        x = optimization_barrier(x)
         lp = _constrain_layer(lp, cfg, mesh)
         h = attention_block(
             rms_norm(x, lp["ln1"], cfg.norm_eps), lp, cfg, positions,

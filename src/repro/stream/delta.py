@@ -1,0 +1,180 @@
+"""Batch ingestion for the streaming MSF engine (DESIGN.md §6.2).
+
+Responsibilities:
+
+- **Canonicalize** an incoming undirected batch: drop self-loops, collapse
+  in-batch duplicates keeping the minimum weight (host side, exact — same
+  policy as ``graphs.structures.from_edges``).
+- **Dedupe against the live edge set** (the current forest): live edges are
+  kept as a *sorted* array of packed ``(min, max)`` endpoint keys; batch
+  keys are binary-searched against it. When ``n ≤ 2^16`` the key packs
+  into one uint32 (``lo << 16 | hi``) and the lookup runs on-device as a
+  single jitted kernel over the fixed-capacity buffers (one executable per
+  engine configuration); larger ``n`` falls back to the host int64 path of
+  ``graphs.structures.edge_keys``.
+- **Classify** each batch edge as NEW (absent from the live set), DECREASE
+  (present, strictly cheaper than the live weight) or DROP (present, not
+  cheaper).
+- **Stable global edge ids**: a NEW edge is assigned the next gid and keeps
+  it for as long as it lives in the forest, so MSF edge ids remain
+  meaningful across versions; a DECREASE keeps the live edge's gid.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.structures import canonical_edges, dedupe_canonical, edge_keys
+
+#: largest vertex count for which the packed-uint32 on-device lookup applies
+PACK_LIMIT = 1 << 16
+#: sorted-buffer padding sentinel; above every real key (lo < hi ≤ 2^16 - 1
+#: ⇒ key ≤ 0xFFFEFFFF < 0xFFFFFFFF)
+KEY_PAD = np.uint32(0xFFFFFFFF)
+
+
+def pack_key_u32(lo, hi):
+    """uint32 key ``lo << 16 | hi`` for canonical pairs, n ≤ 2^16."""
+    return (lo.astype(jnp.uint32) << 16) | hi.astype(jnp.uint32)
+
+
+class PreparedBatch(NamedTuple):
+    """A canonicalized, in-batch-deduped undirected edge batch (host arrays,
+    sorted by (lo, hi) key)."""
+
+    lo: np.ndarray  # int32 [count]
+    hi: np.ndarray  # int32 [count]
+    w: np.ndarray  # float32 [count]
+    count: int
+    dropped: int  # self-loops + in-batch duplicates removed
+
+
+def prepare_batch(u, v, w, n: int) -> PreparedBatch:
+    """Canonicalize one incoming batch. Exact host-side pass."""
+    u = np.asarray(u, np.int64)
+    v = np.asarray(v, np.int64)
+    w = np.asarray(w, np.float64)
+    if not (u.shape == v.shape == w.shape):
+        raise ValueError("u, v, w must have identical shapes")
+    if u.size and (u.min() < 0 or v.min() < 0 or max(u.max(), v.max()) >= n):
+        raise ValueError(f"edge endpoints out of range [0, {n})")
+    raw = len(u)
+    lo, hi, keep = canonical_edges(u, v)
+    lo, hi, w = lo[keep], hi[keep], w[keep]
+    lo, hi, w = dedupe_canonical(lo, hi, w, n)
+    return PreparedBatch(
+        lo=lo.astype(np.int32),
+        hi=hi.astype(np.int32),
+        w=w.astype(np.float32),
+        count=len(lo),
+        dropped=raw - len(lo),
+    )
+
+
+class BatchPlan(NamedTuple):
+    """Classification of a prepared batch against the live edge set."""
+
+    is_new: np.ndarray  # bool [count]
+    is_decrease: np.ndarray  # bool [count]: present and strictly cheaper
+    live_pos: np.ndarray  # int32 [count]: index into the *sorted* live order
+    n_new: int
+    n_decrease: int
+    n_drop: int
+
+
+@jax.jit
+def _match_device(batch_lo, batch_hi, batch_valid, live_keys_sorted):
+    """On-device membership probe: batch keys vs the sorted live key buffer.
+
+    ``live_keys_sorted`` is uint32 [forest_capacity], KEY_PAD beyond the
+    live count, so one ``searchsorted`` per batch resolves membership.
+    """
+    keys = pack_key_u32(batch_lo, batch_hi)
+    j = jnp.searchsorted(live_keys_sorted, keys)
+    j = jnp.clip(j, 0, live_keys_sorted.shape[0] - 1)
+    found = batch_valid & (live_keys_sorted[j] == keys)
+    return found, j.astype(jnp.int32)
+
+
+def classify_batch(
+    batch: PreparedBatch,
+    live_keys_sorted: np.ndarray,
+    live_w_sorted: np.ndarray,
+    n: int,
+    capacity: int | None = None,
+) -> BatchPlan:
+    """Split a prepared batch into NEW / DECREASE / DROP vs the live set.
+
+    ``live_keys_sorted``: sorted live keys — uint32-packed (device path,
+    n ≤ PACK_LIMIT) or int64 ``edge_keys`` (host path), padded with the
+    respective sentinel. ``live_w_sorted``: float32 weights in the same
+    order. ``capacity``: pad the batch to this length before the device
+    probe so every batch size reuses one compiled lookup kernel.
+    """
+    if batch.count == 0:
+        z = np.zeros(0, bool)
+        return BatchPlan(z, z, np.zeros(0, np.int32), 0, 0, 0)
+    if n <= PACK_LIMIT:
+        cap = capacity if capacity is not None else batch.count
+        lo_p = np.zeros(cap, np.int32)
+        hi_p = np.zeros(cap, np.int32)
+        valid_p = np.zeros(cap, bool)
+        lo_p[: batch.count] = batch.lo
+        hi_p[: batch.count] = batch.hi
+        valid_p[: batch.count] = True
+        found, pos = _match_device(
+            jnp.asarray(lo_p),
+            jnp.asarray(hi_p),
+            jnp.asarray(valid_p),
+            jnp.asarray(live_keys_sorted),
+        )
+        found = np.asarray(found)[: batch.count]
+        pos = np.asarray(pos)[: batch.count]
+    else:
+        keys = edge_keys(batch.lo, batch.hi, n)
+        pos = np.searchsorted(live_keys_sorted, keys).astype(np.int32)
+        pos = np.clip(pos, 0, max(len(live_keys_sorted) - 1, 0))
+        found = (
+            live_keys_sorted[pos] == keys
+            if len(live_keys_sorted)
+            else np.zeros(batch.count, bool)
+        )
+    cheaper = np.zeros(batch.count, bool)
+    if len(live_w_sorted):
+        # pos is only meaningful where found; clip so misses stay in bounds.
+        safe = np.clip(pos, 0, len(live_w_sorted) - 1)
+        cheaper = found & (batch.w < live_w_sorted[safe])
+    is_new = ~found
+    return BatchPlan(
+        is_new=is_new,
+        is_decrease=cheaper,
+        live_pos=pos,
+        n_new=int(is_new.sum()),
+        n_decrease=int(cheaper.sum()),
+        n_drop=int((found & ~cheaper).sum()),
+    )
+
+
+def build_live_index(lo, hi, w, n: int, capacity: int):
+    """Sorted (keys, weights, rows) index over the live forest edges.
+
+    Returns (keys_sorted padded to ``capacity``, w_sorted, rows_sorted)
+    where ``rows_sorted`` maps a sorted position back to the store row.
+    The key dtype matches what :func:`classify_batch` expects for this n.
+    """
+    lo = np.asarray(lo, np.int64)
+    hi = np.asarray(hi, np.int64)
+    keys = edge_keys(lo, hi, n)
+    order = np.argsort(keys, kind="stable")
+    keys_sorted = keys[order]
+    if n <= PACK_LIMIT:
+        packed = (lo[order].astype(np.uint32) << 16) | hi[order].astype(np.uint32)
+        buf = np.full(capacity, KEY_PAD, np.uint32)
+        buf[: len(packed)] = packed
+    else:
+        buf = np.full(capacity, np.iinfo(np.int64).max, np.int64)
+        buf[: len(keys_sorted)] = keys_sorted
+    return buf, np.asarray(w, np.float32)[order], order.astype(np.int32)

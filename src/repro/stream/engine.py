@@ -1,0 +1,328 @@
+"""Streaming minimum spanning forest engine (DESIGN.md §6.1).
+
+Maintains the MSF of an edge stream under **batch insertions** and **batch
+deletions**, serving consistent snapshots to the query layer while updates
+are in flight.
+
+Insertions are *exact* via the sparsification identity
+
+    MSF(G ∪ B) = MSF(MSF(G) ∪ B)
+
+(Sanders & Schimek 2023, §2; Kopelowitz et al. 2018): the engine never
+stores more than the current forest (≤ n − 1 undirected edges), so an
+insert batch of size |B| runs the already-jitted ``repro.core.msf`` kernel
+over a *fixed-capacity* union buffer of exactly
+
+    forest_capacity + batch_capacity  =  (n − 1) + B_cap
+
+undirected slots — O(n + |B|) instead of O(m) work, and one compiled
+executable for every batch size (padding, not re-tracing).
+
+Deletions are **tombstoned**: the edge is marked dead, excluded from the
+live index, and the published snapshot is re-issued with ``stale=True``.
+The structural effect (component splits) becomes visible at the next
+*compaction* — triggered automatically when the tombstoned fraction
+exceeds ``compact_trigger`` or by calling :meth:`compact` — or implicitly
+at the next insert batch (dead rows never enter the union buffer, and the
+store is rewritten from the MSF result). Because non-forest edges were
+discarded by sparsification, a deleted forest edge is *not* replaced by a
+previously-seen non-forest edge; this is the standard trade-off of
+forest-only streaming (documented in DESIGN.md §6.4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.msf import msf
+from repro.graphs.structures import Graph
+from repro.stream import delta
+from repro.stream.snapshot import SnapshotStore, make_snapshot
+
+
+class UpdateStats(NamedTuple):
+    version: int
+    weight: float
+    n_components: int
+    n_forest_edges: int
+    n_new: int  # batch edges absent from the live set
+    n_decrease: int  # batch edges that lowered a live weight
+    n_drop: int  # batch duplicates that changed nothing
+    iterations: int  # MSF hook/shortcut iterations for this update
+    union_directed_edges: int  # traced edge-buffer size of the update
+
+
+class DeleteStats(NamedTuple):
+    version: int
+    n_deleted: int
+    n_missing: int  # requested deletions not present in the forest
+    compacted: bool
+
+
+class StreamingMSF:
+    """Incremental MSF over an undirected edge stream.
+
+    Parameters
+    ----------
+    n: vertex count (static — defines every buffer shape).
+    batch_capacity: max undirected edges per insert batch; also the pad
+        target, so every batch reuses one compiled MSF executable.
+    compact_trigger: tombstoned-fraction threshold that forces compaction.
+    variant / shortcut / capacity: forwarded to ``repro.core.msf``.
+    """
+
+    def __init__(
+        self,
+        n: int,
+        batch_capacity: int = 1024,
+        *,
+        compact_trigger: float = 0.25,
+        variant: str = "complete",
+        shortcut: str = "complete",
+        capacity: int = 1 << 16,
+    ):
+        if n < 2:
+            raise ValueError("StreamingMSF needs n >= 2")
+        if batch_capacity < 1:
+            raise ValueError("batch_capacity must be >= 1")
+        self.n = int(n)
+        self.batch_capacity = int(batch_capacity)
+        self.forest_capacity = self.n - 1
+        self.compact_trigger = float(compact_trigger)
+        self._msf_opts = dict(variant=variant, shortcut=shortcut, capacity=capacity)
+
+        fc = self.forest_capacity
+        # Host-side forest store (compact: rows [0, _count) are live-or-dead).
+        self._lo = np.zeros(fc, np.int32)
+        self._hi = np.zeros(fc, np.int32)
+        self._w = np.zeros(fc, np.float32)
+        self._gid = np.full(fc, -1, np.int32)
+        self._dead = np.zeros(fc, bool)
+        self._count = 0
+        self._n_dead = 0
+        self._weight = 0.0
+        self._next_gid = 0
+        self._version = 0
+
+        self.snapshots = SnapshotStore()
+        self.last_union_shape: tuple | None = None
+        self._publish(stale=False, parent=np.arange(self.n, dtype=np.int32))
+        self._refresh_live_index()
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    @property
+    def union_edge_capacity(self) -> int:
+        """Undirected slots per update — the (n − 1) + B_cap bound."""
+        return self.forest_capacity + self.batch_capacity
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def weight(self) -> float:
+        return self._weight
+
+    @property
+    def n_forest_edges(self) -> int:
+        return self._count - self._n_dead
+
+    def forest_edges(self):
+        """Copies of the live forest rows: (lo, hi, w, gid)."""
+        live = ~self._dead[: self._count]
+        idx = np.flatnonzero(live)
+        return (
+            self._lo[idx].copy(),
+            self._hi[idx].copy(),
+            self._w[idx].copy(),
+            self._gid[idx].copy(),
+        )
+
+    def insert_batch(self, u, v, w) -> UpdateStats:
+        """Apply one batch of undirected weighted edge insertions.
+
+        Exact MSF maintenance: duplicates of live edges are dropped (or
+        treated as weight decreases, keeping the stable gid), new edges
+        get fresh gids, and the forest is recomputed over forest ∪ batch.
+        """
+        pb = delta.prepare_batch(u, v, w, self.n)
+        if pb.count > self.batch_capacity:
+            raise ValueError(
+                f"batch of {pb.count} unique edges exceeds batch_capacity="
+                f"{self.batch_capacity}; split the batch or raise the capacity"
+            )
+        plan = delta.classify_batch(
+            pb, self._live_keys, self._live_w, self.n, self.batch_capacity
+        )
+        # Weight decreases: update the live row in place; gid is unchanged.
+        if plan.n_decrease:
+            rows = self._live_rows[plan.live_pos[plan.is_decrease]]
+            self._w[rows] = np.minimum(self._w[rows], pb.w[plan.is_decrease])
+        # New edges: assign stable gids.
+        new_lo = pb.lo[plan.is_new]
+        new_hi = pb.hi[plan.is_new]
+        new_w = pb.w[plan.is_new]
+        new_gid = np.arange(
+            self._next_gid, self._next_gid + plan.n_new, dtype=np.int32
+        )
+        self._next_gid += plan.n_new
+        r = self._run_union(new_lo, new_hi, new_w, new_gid)
+        return UpdateStats(
+            version=self._version,
+            weight=self._weight,
+            n_components=self.snapshots.acquire().n_components,
+            n_forest_edges=self._count,
+            n_new=plan.n_new,
+            n_decrease=plan.n_decrease,
+            n_drop=plan.n_drop + pb.dropped,
+            iterations=int(r.iterations),
+            union_directed_edges=self.last_union_shape[0],
+        )
+
+    def delete_batch(self, u, v) -> DeleteStats:
+        """Tombstone a batch of undirected edges (by endpoints).
+
+        Edges not currently in the forest are counted as missing (either
+        never inserted, or discarded as non-forest edges by
+        sparsification). The snapshot is republished with ``stale=True``;
+        compaction (automatic past ``compact_trigger``, or explicit) makes
+        the component splits visible.
+        """
+        pb = delta.prepare_batch(u, v, np.zeros(len(np.asarray(u))), self.n)
+        # Deletions are not bounded by batch_capacity (nothing enters the
+        # union buffer); probe the live index in capacity-sized chunks so
+        # the device lookup kernel keeps its one compiled shape.
+        n_deleted = 0
+        for k in range(0, pb.count, self.batch_capacity):
+            chunk = delta.PreparedBatch(
+                lo=pb.lo[k : k + self.batch_capacity],
+                hi=pb.hi[k : k + self.batch_capacity],
+                w=pb.w[k : k + self.batch_capacity],
+                count=min(self.batch_capacity, pb.count - k),
+                dropped=0,
+            )
+            plan = delta.classify_batch(
+                chunk, self._live_keys, self._live_w, self.n, self.batch_capacity
+            )
+            found = ~plan.is_new
+            rows = self._live_rows[plan.live_pos[found]]
+            newly_dead = rows[~self._dead[rows]]
+            self._dead[newly_dead] = True
+            self._n_dead += len(newly_dead)
+            # Keep the reported weight equal to the *live* edge sum so a
+            # stale snapshot is stale in connectivity only, never in weight.
+            self._weight -= float(self._w[newly_dead].sum())
+            n_deleted += len(newly_dead)
+        n_missing = pb.count - n_deleted
+        compacted = False
+        if self._n_dead and self._n_dead >= self.compact_trigger * max(
+            1, self._count
+        ):
+            self.compact()
+            compacted = True
+        else:
+            self._version += 1
+            self._publish(stale=self._n_dead > 0)
+            self._refresh_live_index()
+        return DeleteStats(
+            version=self._version,
+            n_deleted=n_deleted,
+            n_missing=n_missing,
+            compacted=compacted,
+        )
+
+    def compact(self) -> UpdateStats:
+        """Drop tombstoned rows and rebuild labels/weight from the retained
+        forest edges (the rebuild-from-retained compaction path)."""
+        empty = np.zeros(0, np.int32)
+        r = self._run_union(empty, empty, np.zeros(0, np.float32), empty)
+        return UpdateStats(
+            version=self._version,
+            weight=self._weight,
+            n_components=self.snapshots.acquire().n_components,
+            n_forest_edges=self._count,
+            n_new=0,
+            n_decrease=0,
+            n_drop=0,
+            iterations=int(r.iterations),
+            union_directed_edges=self.last_union_shape[0],
+        )
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+
+    def _run_union(self, b_lo, b_hi, b_w, b_gid):
+        """MSF over (live forest ∪ batch) in the fixed-capacity union
+        buffer; rewrite the store from the result and publish a snapshot."""
+        U = self.union_edge_capacity
+        lo_u = np.zeros(U, np.int32)
+        hi_u = np.zeros(U, np.int32)
+        w_u = np.full(U, np.inf, np.float32)
+        gid_u = np.full(U, -1, np.int32)
+        valid_u = np.zeros(U, bool)
+
+        live = np.flatnonzero(~self._dead[: self._count])
+        f = len(live)
+        lo_u[:f], hi_u[:f] = self._lo[live], self._hi[live]
+        w_u[:f], gid_u[:f] = self._w[live], self._gid[live]
+        valid_u[:f] = True
+        b = len(b_lo)
+        sl = slice(self.forest_capacity, self.forest_capacity + b)
+        lo_u[sl], hi_u[sl], w_u[sl], gid_u[sl] = b_lo, b_hi, b_w, b_gid
+        valid_u[sl] = True
+
+        local_eid = np.arange(U, dtype=np.int32)
+        g = Graph(
+            src=np.concatenate([lo_u, hi_u]),
+            dst=np.concatenate([hi_u, lo_u]),
+            w=np.concatenate([w_u, w_u]),
+            eid=np.concatenate([local_eid, local_eid]),
+            valid=np.concatenate([valid_u, valid_u]),
+            n=self.n,
+        )
+        self.last_union_shape = tuple(g.src.shape)
+        r = msf(g, **self._msf_opts)
+
+        n_f = int(r.n_msf_edges)
+        sel = np.asarray(r.msf_eids)[:n_f]  # local union indices → rows
+        self._lo[:n_f], self._hi[:n_f] = lo_u[sel], hi_u[sel]
+        self._w[:n_f], self._gid[:n_f] = w_u[sel], gid_u[sel]
+        self._dead[:] = False
+        self._count = n_f
+        self._n_dead = 0
+        self._weight = float(r.weight)
+        self._version += 1
+        self._publish(stale=False, parent=r.parent)
+        self._refresh_live_index()
+        return r
+
+    def _publish(self, *, stale: bool, parent=None):
+        if parent is None:
+            parent = self.snapshots.acquire().parent
+        self.snapshots.publish(
+            make_snapshot(
+                self._version,
+                parent,
+                self._weight,
+                self.n_forest_edges,
+                stale=stale,
+            )
+        )
+
+    def _refresh_live_index(self):
+        live = np.flatnonzero(~self._dead[: self._count])
+        keys, w_sorted, order = delta.build_live_index(
+            self._lo[live],
+            self._hi[live],
+            self._w[live],
+            self.n,
+            self.forest_capacity,
+        )
+        self._live_keys = keys
+        self._live_w = w_sorted
+        self._live_rows = live[order] if len(live) else np.zeros(0, np.int64)

@@ -1,0 +1,154 @@
+"""Batched connectivity query serving (DESIGN.md §6.5).
+
+Queries are answered from a published :class:`~repro.stream.snapshot.Snapshot`
+— never from the engine's in-flight state — via one *fused* jitted gather
+kernel (parent labels, pair equality and component sizes come out of a
+single compiled call). Incoming query batches are padded to the next power
+of two, so the number of compiled executables is bounded by
+``log2(max_batch)`` regardless of traffic shape.
+
+Two entry styles:
+
+- :class:`QueryService` — array-in/array-out batched calls (the serving
+  hot path; used by ``launch/serve_graph.py`` and the benchmarks);
+- :class:`MicroBatcher` — accumulates point queries and answers them all
+  in one fused padded batch on ``flush()`` (the microbatching layer a
+  request frontend would sit on).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.stream.snapshot import Snapshot, SnapshotStore
+
+
+def next_pow2(k: int, floor: int = 16) -> int:
+    """Smallest power of two ≥ max(k, floor)."""
+    return max(floor, 1 << (max(int(k), 1) - 1).bit_length())
+
+
+@jax.jit
+def _answer_fused(parent, comp_size, u, v):
+    """One kernel for every query type: gathers fused by XLA.
+
+    Returns (connected[u,v], component_id[u], component_size[u]).
+    """
+    pu = parent[u]
+    pv = parent[v]
+    return pu == pv, pu, comp_size[u]
+
+
+class QueryService:
+    """Answer connectivity queries from the latest published snapshot."""
+
+    def __init__(self, store: SnapshotStore, *, max_batch: int = 1 << 14,
+                 pad_floor: int = 16):
+        self.store = store
+        self.max_batch = int(max_batch)
+        self.pad_floor = int(pad_floor)
+
+    # -- batched query API -------------------------------------------------
+
+    def connected(self, u, v) -> np.ndarray:
+        """bool [k]: are u[i] and v[i] in the same component?"""
+        conn, _, _ = self._run(u, v)
+        return conn
+
+    def component_id(self, u) -> np.ndarray:
+        """int32 [k]: canonical component label of each u[i]."""
+        _, comp, _ = self._run(u, u)
+        return comp
+
+    def component_size(self, u) -> np.ndarray:
+        """int32 [k]: size of the component containing each u[i]."""
+        _, _, size = self._run(u, u)
+        return size
+
+    def forest_weight(self) -> float:
+        return self.store.acquire().weight
+
+    def snapshot_version(self) -> int:
+        return self.store.version
+
+    # -- internals ---------------------------------------------------------
+
+    def _run(self, u, v) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        snap = self.store.acquire()  # one consistent version for the batch
+        u = np.asarray(u, np.int32)
+        v = np.asarray(v, np.int32)
+        if u.shape != v.shape or u.ndim != 1:
+            raise ValueError("query endpoints must be 1-d arrays of equal length")
+        k = len(u)
+        if k == 0:
+            z = np.zeros(0, np.int32)
+            return np.zeros(0, bool), z, z
+        if k > self.max_batch:
+            raise ValueError(f"query batch {k} exceeds max_batch={self.max_batch}")
+        n = snap.parent.shape[0]
+        if u.min() < 0 or v.min() < 0 or max(u.max(), v.max()) >= n:
+            raise ValueError(f"query vertex out of range [0, {n})")
+        pad = next_pow2(k, self.pad_floor)
+        u_p = np.zeros(pad, np.int32)
+        v_p = np.zeros(pad, np.int32)
+        u_p[:k], v_p[:k] = u, v
+        conn, comp, size = _answer_fused(snap.parent, snap.comp_size, u_p, v_p)
+        return (
+            np.asarray(conn)[:k],
+            np.asarray(comp)[:k],
+            np.asarray(size)[:k],
+        )
+
+
+class MicroBatcher:
+    """Accumulate point queries; answer them in one fused padded batch.
+
+    ``ask_connected(u, v)`` returns an opaque ticket; ``flush()`` answers
+    every queued query against a *single* snapshot version and returns the
+    list of results in ticket order. Auto-flushes when the queue reaches
+    ``max_queue``; asking again after a flush starts a new window and
+    invalidates older tickets (``result`` raises ``KeyError`` on them).
+    """
+
+    def __init__(self, service: QueryService, max_queue: int = 4096):
+        self.service = service
+        self.max_queue = int(max_queue)
+        self._window = 0
+        self._pairs: List[Tuple[int, int]] = []
+        self._results: List[bool] | None = None
+
+    def ask_connected(self, u: int, v: int) -> Tuple[int, int]:
+        if self._results is not None:  # start a new window
+            self._window += 1
+            self._pairs, self._results = [], None
+        self._pairs.append((int(u), int(v)))
+        ticket = (self._window, len(self._pairs) - 1)
+        if len(self._pairs) >= self.max_queue:
+            self.flush()
+        return ticket
+
+    def flush(self) -> List[bool]:
+        if self._results is not None:
+            return self._results
+        if not self._pairs:
+            self._results = []
+            return self._results
+        arr = np.asarray(self._pairs, np.int32)
+        conn = self.service.connected(arr[:, 0], arr[:, 1])
+        self._results = [bool(x) for x in conn]
+        return self._results
+
+    def result(self, ticket: Tuple[int, int]) -> bool:
+        """Result for a ticket; raises if its window has been superseded."""
+        window, idx = ticket
+        if window != self._window:
+            raise KeyError(
+                f"ticket from window {window} is stale (current window "
+                f"{self._window}); results are only held for one window"
+            )
+        if self._results is None:
+            self.flush()
+        return self._results[idx]

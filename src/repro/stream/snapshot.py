@@ -1,0 +1,93 @@
+"""Versioned, double-buffered forest snapshots (DESIGN.md §6.3).
+
+The streaming engine mutates its edge store between MSF runs; queries must
+never observe that in-flight state. The protocol:
+
+- a :class:`Snapshot` is an *immutable* value: version counter, canonical
+  parent labels, per-vertex component sizes, component count, total forest
+  weight, forest edge count, and a ``stale`` bit (set between a tombstone
+  batch and the compaction that makes its effect visible);
+- the :class:`SnapshotStore` keeps two slots. A publisher writes the fresh
+  snapshot into the *inactive* slot and then flips the active index — a
+  single reference swap, so a reader that ``acquire()``-d the old snapshot
+  keeps a fully consistent view (labels, sizes and weight all from one
+  version) for as long as it holds the object, while new readers see the
+  new version immediately.
+
+Single writer (the engine), any number of readers (query services).
+"""
+from __future__ import annotations
+
+import threading
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Snapshot(NamedTuple):
+    version: int
+    parent: jax.Array  # int32 [n]: canonical (star-root) component labels
+    comp_size: jax.Array  # int32 [n]: size of the component containing i
+    n_components: int
+    weight: float  # total forest weight
+    n_forest_edges: int
+    stale: bool = False  # True ⇒ tombstones pending compaction
+
+
+@jax.jit
+def _component_stats(parent: jax.Array):
+    """Per-vertex component sizes + component count from canonical labels."""
+    n = parent.shape[0]
+    sizes = jax.ops.segment_sum(
+        jnp.ones_like(parent), parent, num_segments=n
+    )
+    ncc = jnp.sum(parent == jnp.arange(n, dtype=parent.dtype))
+    return sizes[parent], ncc
+
+
+def make_snapshot(
+    version: int,
+    parent: jax.Array,
+    weight: float,
+    n_forest_edges: int,
+    stale: bool = False,
+) -> Snapshot:
+    comp_size, ncc = _component_stats(jnp.asarray(parent, jnp.int32))
+    return Snapshot(
+        version=int(version),
+        parent=jnp.asarray(parent, jnp.int32),
+        comp_size=comp_size,
+        n_components=int(ncc),
+        weight=float(weight),
+        n_forest_edges=int(n_forest_edges),
+        stale=bool(stale),
+    )
+
+
+class SnapshotStore:
+    """Double-buffered single-writer snapshot publication."""
+
+    def __init__(self):
+        self._slots: list[Optional[Snapshot]] = [None, None]
+        self._active = 0
+        self._publish_lock = threading.Lock()
+
+    def publish(self, snap: Snapshot) -> None:
+        """Install ``snap`` as the current snapshot (writer side)."""
+        with self._publish_lock:
+            nxt = 1 - self._active
+            self._slots[nxt] = snap
+            self._active = nxt  # the flip: readers switch atomically
+
+    def acquire(self) -> Snapshot:
+        """Return the current snapshot (reader side, lock-free)."""
+        snap = self._slots[self._active]
+        if snap is None:
+            raise RuntimeError("no snapshot published yet")
+        return snap
+
+    @property
+    def version(self) -> int:
+        snap = self._slots[self._active]
+        return -1 if snap is None else snap.version

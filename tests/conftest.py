@@ -1,12 +1,10 @@
-import jax
 import pytest
+
+from repro.compat import make_mesh
 
 
 @pytest.fixture(scope="session")
 def host_mesh():
     # 1×1 mesh: smoke tests see the single CPU device (the 512-device
     # override belongs ONLY to the dry-run, per its module header).
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((1, 1), ("data", "model"))

@@ -58,8 +58,8 @@ from repro.checkpoint import restore_checkpoint, save_checkpoint, latest_step
 import sys
 path = sys.argv[1]
 mode = sys.argv[2]
-mesh = jax.make_mesh((jax.device_count(),), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((jax.device_count(),), ("data",))
 sh = NamedSharding(mesh, P("data"))
 t = {"w": jnp.arange(64, dtype=jnp.float32)}
 if mode == "save":

@@ -2,7 +2,7 @@
 shortcut strategies, and graph families — plus hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st  # skips cleanly if absent
 
 from repro.core import msf
 from repro.core.semiring import IMAX
@@ -89,6 +89,29 @@ def test_msf_property_random(n, m, seed):
     for variant in ("complete", "paper"):
         r = msf(g, variant=variant)
         assert abs(float(r.weight) - nx_free_msf_weight(g)) < 1e-3
+
+
+def test_warm_start_parent0():
+    """Re-entrant msf: warm-starting from a converged labeling hooks
+    nothing new; warm-starting from a partial forest reports only the
+    delta weight."""
+    g = random_graph(200, 600, seed=13)
+    r = msf(g)
+    # converged labels in: no new hooks out, same partition
+    r2 = msf(g, parent0=r.parent)
+    assert float(r2.weight) == 0.0
+    assert int(r2.n_msf_edges) == 0
+    assert np.array_equal(np.asarray(r2.parent), np.asarray(r.parent))
+    # pre-merged vertex pairs: the delta weight only covers cross-pair
+    # hooks, and the final partition still has the oracle component count
+    import jax.numpy as jnp
+
+    pairs = (np.arange(g.n, dtype=np.int32) // 2) * 2
+    r3 = msf(g, parent0=jnp.asarray(pairs))
+    assert float(r3.weight) <= nx_free_msf_weight(g)
+    # free pair-merges can only coarsen the partition
+    roots = np.unique(np.asarray(r3.parent))
+    assert len(roots) <= nx_free_n_components(g)
 
 
 def test_empty_and_singleton():

@@ -29,8 +29,8 @@ from repro.graphs.partition import partition_edges_2d
 from repro.graphs.structures import nx_free_msf_weight
 
 assert jax.device_count() == 8, jax.device_count()
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 for g in [random_graph(500, 1500, seed=1), grid_road_graph(20, 25, seed=2)]:
     part = partition_edges_2d(g, 2, 4)
     for sc in ["csp", "baseline", "os"]:

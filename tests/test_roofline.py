@@ -51,10 +51,11 @@ def test_collective_bytes_psum():
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.analysis.hlo_analyzer import analyze
-mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ("d",))
 def f(x):
-    return jax.shard_map(lambda a: jax.lax.psum(a, "d"), mesh=mesh,
-                         in_specs=P("d"), out_specs=P())(x)
+    return shard_map(lambda a: jax.lax.psum(a, "d"), mesh=mesh,
+                     in_specs=P("d"), out_specs=P())(x)
 co = jax.jit(f).lower(jax.ShapeDtypeStruct((8 * 1024,), jnp.float32)).compile()
 res = analyze(co.as_text())
 # all-reduce of a 1024-element f32 shard = 4096 operand bytes per device

@@ -11,9 +11,9 @@ from repro.core.multilinear import spmm_sum_2d
 from repro.graphs import random_graph
 from repro.graphs.partition import partition_edges_2d
 
+from repro.compat import make_mesh, shard_map
 R, C = 2, 4
-mesh = jax.make_mesh((R, C), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((R, C), ("data", "model"))
 g = random_graph(300, 1200, seed=3)
 part = partition_edges_2d(g, R, C)
 h = 5
@@ -29,7 +29,7 @@ def run(x, src_row, dst_col, valid):
                        shard_size=part.shard_size,
                        col_block_size=R * part.shard_size)
 
-mapped = jax.jit(jax.shard_map(
+mapped = jax.jit(shard_map(
     run, mesh=mesh,
     in_specs=(P(("data", "model"), None), P("data", "model", None),
               P("data", "model", None), P("data", "model", None)),

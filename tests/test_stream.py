@@ -1,0 +1,324 @@
+"""Streaming MSF engine: sparsification identity vs full recompute,
+delta dedupe/gid stability, tombstone deletions + compaction, the
+snapshot/version protocol, and batched query serving (DESIGN.md §6)."""
+import numpy as np
+import pytest
+from _hypothesis_stub import given, settings, st  # skips cleanly if absent
+
+from repro.core.msf import msf
+from repro.graphs.generators import rmat_graph
+from repro.graphs.structures import (
+    from_edges,
+    nx_free_msf_weight,
+    nx_free_n_components,
+)
+from repro.stream import MicroBatcher, QueryService, StreamingMSF, next_pow2
+
+
+def _random_batches(rng, n, k, per):
+    out = []
+    for _ in range(k):
+        m = int(rng.integers(1, per + 1))
+        out.append(
+            (
+                rng.integers(0, n, m),
+                rng.integers(0, n, m),
+                rng.integers(1, 256, m).astype(np.float64),
+            )
+        )
+    return out
+
+
+def _accumulated(batches, n):
+    u = np.concatenate([b[0] for b in batches])
+    v = np.concatenate([b[1] for b in batches])
+    w = np.concatenate([b[2] for b in batches])
+    return from_edges(u, v, w, n)
+
+
+def _same_partition(a, b):
+    """Two label vectors induce the same partition (bijective label map)."""
+    fwd, bwd = {}, {}
+    for x, y in zip(np.asarray(a), np.asarray(b)):
+        if fwd.setdefault(int(x), int(y)) != int(y):
+            return False
+        if bwd.setdefault(int(y), int(x)) != int(x):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# sparsification identity: streaming == from-scratch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,k", [(0, 3), (1, 6), (2, 10)])
+def test_stream_matches_full_recompute(seed, k):
+    rng = np.random.default_rng(seed)
+    n = 256
+    eng = StreamingMSF(n, batch_capacity=128)
+    batches = _random_batches(rng, n, k, 100)
+    for u, v, w in batches:
+        eng.insert_batch(u, v, w)
+    g = _accumulated(batches, n)
+    assert abs(eng.weight - nx_free_msf_weight(g)) < 1e-3
+    full = msf(g)
+    assert _same_partition(eng.snapshots.acquire().parent, full.parent)
+    assert eng.snapshots.acquire().n_components == nx_free_n_components(g)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(4, 60),
+    k=st.integers(1, 6),
+    per=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stream_property_sparsification_identity(n, k, per, seed):
+    """Property: after k random insert batches the engine's weight and
+    partition match msf() on the accumulated edge set."""
+    rng = np.random.default_rng(seed)
+    eng = StreamingMSF(n, batch_capacity=per)
+    batches = _random_batches(rng, n, k, per)
+    for u, v, w in batches:
+        eng.insert_batch(u, v, w)
+    g = _accumulated(batches, n)
+    assert abs(eng.weight - nx_free_msf_weight(g)) < 1e-3
+    assert _same_partition(eng.snapshots.acquire().parent, msf(g).parent)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 2^16-vertex RMAT, one executable, bounded union buffer
+# ---------------------------------------------------------------------------
+
+
+def test_stream_rmat_2e16_acceptance():
+    """2^16-vertex RMAT stream: forest weight and component labels equal a
+    full msf() recompute over the union, with every update executing over
+    ≤ (n − 1 + |batch|) padded undirected edges."""
+    scale, batch_cap = 16, 8192
+    n = 1 << scale
+    g_full = rmat_graph(scale, 2, seed=7)
+    src = np.asarray(g_full.src)
+    dst = np.asarray(g_full.dst)
+    w = np.asarray(g_full.w)
+    sel = np.asarray(g_full.valid) & (src < dst)
+    lo, hi, w = src[sel], dst[sel], w[sel]
+    rng = np.random.default_rng(7)
+    perm = rng.permutation(len(lo))
+    lo, hi, w = lo[perm], hi[perm], w[perm]
+
+    eng = StreamingMSF(n, batch_capacity=batch_cap)
+    for k in range(0, len(lo), batch_cap):
+        eng.insert_batch(lo[k : k + batch_cap], hi[k : k + batch_cap],
+                         w[k : k + batch_cap])
+        # traced edge-buffer bound: ≤ (n − 1 + |batch|) undirected slots,
+        # i.e. exactly 2 * (n − 1 + batch_capacity) directed entries
+        assert eng.last_union_shape == (2 * (n - 1 + batch_cap),)
+    full = msf(from_edges(lo, hi, w.astype(np.float64), n))
+    assert abs(eng.weight - float(full.weight)) < max(1.0, 1e-6 * eng.weight)
+    assert _same_partition(eng.snapshots.acquire().parent, full.parent)
+
+
+# ---------------------------------------------------------------------------
+# delta: dedupe, weight decrease, stable gids
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_insert_is_dropped_and_decrease_keeps_gid():
+    n = 64
+    eng = StreamingMSF(n, batch_capacity=16)
+    eng.insert_batch([0, 1, 2], [1, 2, 3], [10.0, 20.0, 30.0])
+    w0 = eng.weight
+    lo, hi, w, gid = eng.forest_edges()
+    # re-insert heavier duplicate: dropped entirely
+    s = eng.insert_batch([1, 0], [0, 1], [50.0, 99.0])
+    assert s.n_new == 0 and s.n_decrease == 0
+    assert s.n_drop >= 1  # in-batch dup + live dup both count
+    assert eng.weight == w0
+    # cheaper duplicate: weight decrease, same gid
+    gid_01 = gid[(lo == 0) & (hi == 1)][0]
+    s = eng.insert_batch([1], [0], [4.0])
+    assert s.n_decrease == 1 and s.n_new == 0
+    lo2, hi2, w2, gid2 = eng.forest_edges()
+    m = (lo2 == 0) & (hi2 == 1)
+    assert w2[m][0] == 4.0 and gid2[m][0] == gid_01
+    assert abs(eng.weight - (w0 - 6.0)) < 1e-6
+
+
+def test_batch_capacity_enforced_and_bad_input_rejected():
+    eng = StreamingMSF(16, batch_capacity=2)
+    with pytest.raises(ValueError):
+        eng.insert_batch([0, 1, 2], [1, 2, 3], [1.0, 2.0, 3.0])
+    with pytest.raises(ValueError):
+        eng.insert_batch([0], [99], [1.0])  # endpoint out of range
+
+
+# ---------------------------------------------------------------------------
+# deletions: tombstone, staleness, compaction trigger
+# ---------------------------------------------------------------------------
+
+
+def test_delete_tombstones_then_compaction_splits():
+    n = 8
+    eng = StreamingMSF(n, batch_capacity=8, compact_trigger=10.0)  # manual
+    # path 0-1-2-3
+    eng.insert_batch([0, 1, 2], [1, 2, 3], [1.0, 2.0, 3.0])
+    v_before = eng.version
+    assert eng.snapshots.acquire().n_components == n - 3
+    d = eng.delete_batch([1], [2])
+    assert d.n_deleted == 1 and not d.compacted
+    snap = eng.snapshots.acquire()
+    assert snap.stale and snap.version > v_before
+    assert eng.n_forest_edges == 2
+    # structural split only lands at compaction
+    assert snap.n_components == n - 3
+    eng.compact()
+    snap = eng.snapshots.acquire()
+    assert not snap.stale
+    assert snap.n_components == n - 2
+    assert abs(snap.weight - 4.0) < 1e-6
+
+
+def test_delete_auto_compacts_past_trigger():
+    eng = StreamingMSF(8, batch_capacity=8, compact_trigger=0.3)
+    eng.insert_batch([0, 1, 2], [1, 2, 3], [1.0, 2.0, 3.0])
+    d = eng.delete_batch([0], [1])  # 1/3 dead > 0.3 → compact
+    assert d.compacted
+    assert not eng.snapshots.acquire().stale
+    assert eng.snapshots.acquire().n_components == 8 - 2
+
+
+def test_delete_batch_larger_than_capacity():
+    """Deletions are chunked internally — not bounded by batch_capacity."""
+    eng = StreamingMSF(16, batch_capacity=2, compact_trigger=10.0)
+    eng.insert_batch([0, 1], [1, 2], [1.0, 2.0])
+    eng.insert_batch([2, 3], [3, 4], [3.0, 4.0])
+    d = eng.delete_batch([0, 1, 2, 7, 9], [1, 2, 3, 8, 10])
+    assert d.n_deleted == 3 and d.n_missing == 2
+
+
+def test_stale_snapshot_weight_matches_live_edges():
+    """Between tombstone and compaction the snapshot is stale in
+    *connectivity* only: weight and edge count always track live edges."""
+    eng = StreamingMSF(8, batch_capacity=8, compact_trigger=10.0)
+    eng.insert_batch([0, 1, 2], [1, 2, 3], [1.0, 2.0, 3.0])
+    eng.delete_batch([1], [2])
+    snap = eng.snapshots.acquire()
+    assert snap.stale
+    assert snap.n_forest_edges == 2
+    _, _, w_live, _ = eng.forest_edges()
+    assert abs(snap.weight - float(w_live.sum())) < 1e-6  # 4.0, not 6.0
+
+
+def test_delete_missing_edge_counts_missing():
+    eng = StreamingMSF(8, batch_capacity=8)
+    eng.insert_batch([0], [1], [1.0])
+    d = eng.delete_batch([2], [3])
+    assert d.n_deleted == 0 and d.n_missing == 1
+
+
+def test_insert_after_delete_is_consistent():
+    """Dead rows never enter the union: the next insert makes state exact."""
+    n = 16
+    eng = StreamingMSF(n, batch_capacity=8, compact_trigger=10.0)
+    eng.insert_batch([0, 1, 2], [1, 2, 3], [1.0, 2.0, 3.0])
+    eng.delete_batch([1], [2])
+    eng.insert_batch([4], [5], [7.0])
+    snap = eng.snapshots.acquire()
+    assert not snap.stale
+    # retained: (0,1) (2,3) (4,5) → 3 edges, weight 11, n-3 components
+    assert eng.n_forest_edges == 3
+    assert abs(snap.weight - 11.0) < 1e-6
+    assert snap.n_components == n - 3
+
+
+# ---------------------------------------------------------------------------
+# snapshot protocol
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_double_buffer_consistency():
+    eng = StreamingMSF(32, batch_capacity=8)
+    eng.insert_batch([0, 1], [1, 2], [1.0, 2.0])
+    held = eng.snapshots.acquire()  # a reader holds version v
+    v = held.version
+    w_held = held.weight
+    parent_held = np.asarray(held.parent).copy()
+    eng.insert_batch([5, 6], [6, 7], [3.0, 4.0])  # publish v+1
+    assert eng.snapshots.acquire().version == v + 1
+    # the held snapshot is untouched: labels, weight, version all from v
+    assert held.version == v and held.weight == w_held
+    assert np.array_equal(np.asarray(held.parent), parent_held)
+
+
+def test_versions_monotone_across_all_mutations():
+    eng = StreamingMSF(16, batch_capacity=8, compact_trigger=10.0)
+    seen = [eng.snapshots.version]
+    eng.insert_batch([0, 1], [1, 2], [1.0, 2.0])
+    seen.append(eng.snapshots.version)
+    eng.delete_batch([0], [1])
+    seen.append(eng.snapshots.version)
+    eng.compact()
+    seen.append(eng.snapshots.version)
+    assert seen == sorted(seen) and len(set(seen)) == len(seen)
+
+
+# ---------------------------------------------------------------------------
+# query serving
+# ---------------------------------------------------------------------------
+
+
+def test_query_service_matches_scipy_labels():
+    rng = np.random.default_rng(3)
+    n = 300
+    eng = StreamingMSF(n, batch_capacity=512)
+    svc = QueryService(eng.snapshots)
+    u = rng.integers(0, n, 500)
+    v = rng.integers(0, n, 500)
+    w = rng.integers(1, 256, 500).astype(np.float64)
+    eng.insert_batch(u, v, w)
+    g = from_edges(u, v, w, n)
+    import scipy.sparse as sp
+    import scipy.sparse.csgraph as csg
+
+    src, dst, val = np.asarray(g.src), np.asarray(g.dst), np.asarray(g.valid)
+    a = sp.coo_matrix((np.ones(val.sum()), (src[val], dst[val])), shape=(n, n))
+    _, lab = csg.connected_components(a, directed=False)
+
+    qu = rng.integers(0, n, 333)  # deliberately not a power of two
+    qv = rng.integers(0, n, 333)
+    assert np.array_equal(svc.connected(qu, qv), lab[qu] == lab[qv])
+    comp = svc.component_id(qu)
+    assert _same_partition(lab[qu], comp)
+    sizes = np.bincount(lab, minlength=lab.max() + 1)
+    assert np.array_equal(svc.component_size(qu), sizes[lab[qu]])
+    assert abs(svc.forest_weight() - eng.weight) < 1e-6
+
+
+def test_query_padding_and_bounds():
+    assert next_pow2(1) == 16 and next_pow2(17) == 32 and next_pow2(64) == 64
+    eng = StreamingMSF(8, batch_capacity=4)
+    svc = QueryService(eng.snapshots, max_batch=8)
+    with pytest.raises(ValueError):
+        svc.connected(np.zeros(9, np.int32), np.zeros(9, np.int32))
+    with pytest.raises(ValueError):
+        svc.connected([0], [8])  # out of range
+    assert svc.connected([], []).shape == (0,)
+
+
+def test_microbatcher_single_snapshot_window():
+    eng = StreamingMSF(16, batch_capacity=8)
+    eng.insert_batch([0, 1, 4], [1, 2, 5], [1.0, 2.0, 3.0])
+    mb = MicroBatcher(QueryService(eng.snapshots))
+    t1 = mb.ask_connected(0, 2)
+    t2 = mb.ask_connected(0, 4)
+    t3 = mb.ask_connected(4, 5)
+    res = mb.flush()
+    assert res == [True, False, True]
+    assert mb.result(t1) and not mb.result(t2) and mb.result(t3)
+    # a new window invalidates old tickets instead of serving wrong answers
+    t4 = mb.ask_connected(0, 1)
+    with pytest.raises(KeyError):
+        mb.result(t1)
+    assert mb.result(t4)
