@@ -1,0 +1,82 @@
+"""Coarsening (contract+filter levels) vs the flat AS solve.
+
+Rows per graph family (rmat at increasing scale, grid road, components):
+- ``coarsen_*`` — ``CoarsenMSF`` end-to-end latency (levels + residual),
+  with ``speedup_vs_flat`` and the level schedule in the derived field;
+- ``flat_*``    — ``core.msf`` over the same graph (what the seed did).
+
+``--smoke`` runs one tiny rmat and *asserts* flat/coarsen parity (weight
+and edge set) — the CI kernel-regression tripwire: a broken contraction
+or dedupe kernel fails the step, not just a slower benchmark.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.coarsen import CoarsenConfig, CoarsenMSF
+from repro.core.msf import msf
+from repro.graphs import grid_road_graph, rmat_graph
+from repro.graphs.generators import components_graph
+
+RMAT_SCALES = [12, 13, 14]  # edge factor 8; largest scale is the headline
+EDGE_FACTOR = 8
+SMOKE_SCALE = 8
+
+
+def _eid_set(r):
+    return set(np.asarray(r.msf_eids)[: int(r.n_msf_edges)].tolist())
+
+
+def _bench_graph(name: str, g, cfg: CoarsenConfig, check: bool = False):
+    eng = CoarsenMSF(cfg)
+    if check:
+        flat_r, co_r = msf(g), eng(g)
+        assert abs(float(flat_r.weight) - float(co_r.weight)) <= max(
+            1.0, 1e-6 * float(flat_r.weight)
+        ), (float(flat_r.weight), float(co_r.weight))
+        assert _eid_set(flat_r) == _eid_set(co_r), "coarsen MSF edge set drifted"
+    t_flat = timeit(lambda: msf(g), iters=3)
+    t_co = timeit(lambda: eng(g), iters=3)
+    st = eng.last_stats
+    sched = "|".join(f"{l.n}/{l.m}>{l.n_next}/{l.m_next}" for l in st.levels)
+    return [
+        row(
+            f"coarsen_{name}",
+            t_co * 1e6,
+            f"speedup_vs_flat={t_flat / t_co:.2f}x;levels={len(st.levels)};"
+            f"schedule={sched};residual_n={st.residual_n};"
+            f"residual_m={st.residual_m}",
+        ),
+        row(f"flat_{name}", t_flat * 1e6, f"edges={g.num_directed_edges}"),
+    ]
+
+
+def run_rows(smoke: bool = False):
+    if smoke:
+        g = rmat_graph(SMOKE_SCALE, 4, seed=9)
+        cfg = CoarsenConfig(rounds_per_level=2, cutoff=32)
+        return _bench_graph(f"rmat_s{SMOKE_SCALE}_e4_smoke", g, cfg, check=True)
+    out = []
+    for scale in RMAT_SCALES:
+        g = rmat_graph(scale, EDGE_FACTOR, seed=9)
+        cfg = CoarsenConfig(rounds_per_level=2, cutoff=max(128, g.n >> 4))
+        out += _bench_graph(f"rmat_s{scale}_e{EDGE_FACTOR}", g, cfg)
+    g = grid_road_graph(128, 128, seed=2)
+    out += _bench_graph(
+        "grid_128x128", g, CoarsenConfig(rounds_per_level=2, cutoff=1024)
+    )
+    g = components_graph(64, 256, seed=5)
+    out += _bench_graph(
+        "components_64x256", g, CoarsenConfig(rounds_per_level=2, cutoff=1024)
+    )
+    return out
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv[1:]
+    print("\n".join(run_rows(smoke=smoke)))
+    if smoke:
+        print("# coarsen smoke: flat/coarsen parity OK", file=sys.stderr)

@@ -9,6 +9,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        bench_coarsen,
         bench_graph_suite,
         bench_multilinear,
         bench_shortcut,
@@ -24,6 +25,7 @@ def main() -> None:
         ("fig8-multilinear-vs-pairwise", bench_multilinear),
         ("table1-graph-suite", bench_graph_suite),
         ("stream-msf-serving", bench_stream),
+        ("coarsen-levels-vs-flat", bench_coarsen),
     ]
     print("name,us_per_call,derived")
     for label, mod in mods:

@@ -1,0 +1,16 @@
+# Borůvka contraction + edge-filter coarsening engine (DESIGN.md §7):
+# contract-and-filter levels feeding the AS multilinear MSF solver.
+from repro.coarsen.contract import ContractResult, contract_level
+from repro.coarsen.engine import (
+    CoarsenConfig,
+    CoarsenMSF,
+    CoarsenPrelude,
+    CoarsenStats,
+    LevelStats,
+    coarsen_msf,
+    merge_distributed,
+    precontract_partition,
+    run_levels,
+)
+from repro.coarsen.filter import FilterResult, filter_level
+from repro.coarsen.relabel import compose_labels, rank_relabel, relabel_edges

@@ -1,0 +1,348 @@
+"""Coarsening engine: alternate contract and filter levels, then hand the
+residual graph to the flat AS solver (DESIGN.md §7).
+
+Each level runs K hook+shortcut rounds (``contract.contract_level``), a
+device-side rank/relabel, and the sort-dedupe edge filter
+(``filter.filter_level``). Both n and m shrink geometrically, so the
+dense O(n) vector work and the O(m) multilinear sweeps of the flat
+solver only ever touch the *current* level's padded arrays. When the
+supervertex count drops below ``cutoff`` (or edges run out, or a level
+stops making progress), the residual graph goes to ``core.msf``.
+
+Shapes are re-padded to powers of two between levels (host-driven, like
+the streaming engine), so compiled executables are bounded by
+log2(E) × levels rather than one per input.
+
+Invariants (DESIGN.md §7.4):
+- every hooked edge is an MSF edge of the *original* graph (cut property
+  under the distinct (w, eid) total order), recorded by global eid;
+- filtering is exact: a dropped parallel edge closes a cycle on which it
+  is not the (w, eid)-minimum (cycle property);
+- ``label_map`` composes the per-level relabelings, so original-vertex
+  component labels are a single gather at the end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import numpy as np
+
+from repro.coarsen.contract import contract_level
+from repro.coarsen.filter import filter_level, filter_level_host
+from repro.core.msf import MSFResult, msf as _flat_msf
+from repro.core.semiring import PACK_IDX_MASK
+from repro.graphs.partition import Partition2D, partition_edges_2d
+from repro.graphs.structures import Graph, graph_from_canonical
+from repro.stream.service import next_pow2
+
+_IMAX = np.int32(np.iinfo(np.int32).max)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoarsenConfig:
+    """Static knobs of the contract-and-filter pipeline (hashable — safe
+    to thread through jit-static plumbing)."""
+
+    rounds_per_level: int = 2  # K hook+shortcut rounds per level
+    cutoff: int = 2048  # hand off to core.msf when n ≤ cutoff
+    max_levels: int = 16
+    pack: bool | None = None  # pack32 level kernels; None = auto-detect
+    segmin: str | None = None  # packed segment-min backend ("jnp"/"pallas"/"auto")
+    # Edge-dedupe backend: the jitted sort + pack32 segment-min pipeline
+    # ("device", the TPU path) or the numpy lexsort twin ("host" — the
+    # engine is host-driven between levels, and numpy's sort beats XLA's
+    # CPU sort by ~10x). "auto" picks by jax.default_backend().
+    dedupe: str = "auto"
+
+    def __post_init__(self):
+        if self.rounds_per_level < 1:
+            raise ValueError("rounds_per_level must be >= 1")
+        if self.cutoff < 1:
+            raise ValueError("cutoff must be >= 1")
+        if self.dedupe not in ("auto", "device", "host"):
+            raise ValueError(f"unknown dedupe backend {self.dedupe!r}")
+
+
+class LevelStats(NamedTuple):
+    n: int  # vertices entering the level
+    m: int  # undirected edges entering the level
+    n_next: int  # supervertices after contraction
+    m_next: int  # unique live pairs after filtering
+    hooked: int  # MSF edges recorded this level
+
+
+class CoarsenStats(NamedTuple):
+    levels: Tuple[LevelStats, ...]
+    residual_n: int
+    residual_m: int
+
+
+class CoarsenPrelude(NamedTuple):
+    """Everything the contraction levels decided, residual not yet solved."""
+
+    weight: float  # MSF weight hooked across all levels
+    msf_eids: np.ndarray  # global eids of level-hooked MSF edges
+    label_map: np.ndarray  # int32 [n0]: original vertex → residual vertex id
+    residual: Graph  # canonical symmetric residual graph
+    stats: CoarsenStats
+
+
+def _next_pow2(k: int) -> int:
+    return next_pow2(k, floor=8)  # edge buffers tolerate a smaller floor
+
+
+def _auto_pack(w: np.ndarray, eid: np.ndarray, valid: np.ndarray, e_dir: int) -> bool:
+    """pack32 applies when weights are integral in [0, 255] and both the
+    global eids and the per-level position indices fit 24 bits strictly."""
+    if e_dir >= PACK_IDX_MASK:
+        return False
+    wv = w[valid]
+    if wv.size == 0:
+        return True
+    if not (np.all(wv == np.floor(wv)) and wv.min() >= 0 and wv.max() <= 255):
+        return False
+    return int(eid[valid].max()) < PACK_IDX_MASK
+
+
+def _canonical_host(graph: Graph):
+    """Host copies of the undirected (lo < hi) edge set, pow2-padded."""
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    w = np.asarray(graph.w)
+    eid = np.asarray(graph.eid)
+    valid = np.asarray(graph.valid)
+    sel = valid & (src < dst)
+    m0 = int(sel.sum())
+    pad = _next_pow2(m0)
+    lo = np.zeros(pad, np.int32)
+    hi = np.zeros(pad, np.int32)
+    ww = np.full(pad, np.inf, np.float32)
+    ee = np.full(pad, _IMAX, np.int32)
+    vv = np.zeros(pad, bool)
+    lo[:m0], hi[:m0] = src[sel], dst[sel]
+    ww[:m0], ee[:m0] = w[sel], eid[sel]
+    vv[:m0] = True
+    return lo, hi, ww, ee, vv, m0
+
+
+def run_levels(graph: Graph, config: CoarsenConfig | None = None) -> CoarsenPrelude:
+    """Contract-and-filter until the cutoff; return the residual + prelude."""
+    cfg = config or CoarsenConfig()
+    n0 = graph.n
+    lo, hi, w, eid, valid, m_cur = _canonical_host(graph)
+    use_pack = (
+        _auto_pack(np.asarray(graph.w), np.asarray(graph.eid),
+                   np.asarray(graph.valid), 2 * len(lo))
+        if cfg.pack is None
+        else cfg.pack
+    )
+    segmin_fn = None
+    if use_pack and cfg.segmin not in (None, "jnp"):
+        from repro.kernels.ops import make_packed_segmin
+
+        segmin_fn = make_packed_segmin(cfg.segmin)
+    dedupe = cfg.dedupe
+    if dedupe == "auto":
+        dedupe = "device" if jax.default_backend() == "tpu" else "host"
+
+    label_map = np.arange(n0, dtype=np.int32)
+    weight = 0.0
+    eids_acc: list[np.ndarray] = []
+    stats: list[LevelStats] = []
+    n_cur = n0
+
+    while len(stats) < cfg.max_levels and n_cur > cfg.cutoff and m_cur > 0:
+        # Vertex dim is jit-static: pad to pow2 so executables are keyed
+        # by (pow2 n, pow2 E) buckets and reused across levels/graphs
+        # instead of one compile per exact supervertex count. Padding
+        # vertices are isolated → they stay roots; their ranks trail the
+        # real ones (padding ids sit above every real id, and the rank
+        # prefix-sum only counts roots at smaller ids), so real
+        # supervertex ids remain contiguous in [0, R).
+        n_pad = next_pow2(n_cur, floor=8)
+        src = np.concatenate([lo, hi])
+        dst = np.concatenate([hi, lo])
+        w2 = np.concatenate([w, w])
+        eid2 = np.concatenate([eid, eid])
+        valid2 = np.concatenate([valid, valid])
+        res = contract_level(
+            src, dst, w2, eid2, valid2,
+            n=n_pad, rounds=cfg.rounds_per_level,
+            pack=use_pack, segmin=segmin_fn,
+        )
+        n_next = int(res.n_next) - (n_pad - n_cur)  # drop padding roots
+        if n_next == n_cur:  # every component already complete
+            break
+        n_f = int(res.n_msf_edges)
+        eids_acc.append(np.asarray(res.msf_eids[:n_f]))
+        weight += float(res.weight)
+        if dedupe == "host":
+            l2, h2, w2_, e2_ = filter_level_host(
+                lo, hi, w, eid, valid, res.new_ids, n_cur
+            )
+            m_next = len(l2)
+            pad = _next_pow2(m_next)
+            lo = np.zeros(pad, np.int32)
+            hi = np.zeros(pad, np.int32)
+            w = np.full(pad, np.inf, np.float32)
+            eid = np.full(pad, _IMAX, np.int32)
+            lo[:m_next], hi[:m_next] = l2, h2
+            w[:m_next], eid[:m_next] = w2_, e2_
+        else:
+            fr = filter_level(
+                lo, hi, w, eid, valid, res.new_ids,
+                n=n_pad, pack=use_pack, segmin=segmin_fn,
+            )
+            m_next = int(fr.m_new)
+            pad = _next_pow2(m_next)
+            lo = np.asarray(fr.lo[:pad])
+            hi = np.asarray(fr.hi[:pad])
+            w = np.asarray(fr.w[:pad])
+            eid = np.asarray(fr.eid[:pad])
+        label_map = np.asarray(res.new_ids)[label_map]
+        stats.append(LevelStats(n=n_cur, m=m_cur, n_next=n_next,
+                                m_next=m_next, hooked=n_f))
+        valid = np.arange(pad) < m_next  # filter output is front-packed
+        n_cur, m_cur = n_next, m_next
+
+    # Residual n is pow2-padded too (padding vertices are isolated
+    # singleton components, never referenced by label_map) — the flat
+    # solve and the 2D partition then also reuse executables across
+    # similar graphs instead of compiling per exact supervertex count.
+    residual = graph_from_canonical(
+        lo, hi, w, eid, valid, next_pow2(n_cur, floor=8)
+    )
+    return CoarsenPrelude(
+        weight=weight,
+        msf_eids=(
+            np.concatenate(eids_acc) if eids_acc else np.zeros(0, np.int32)
+        ),
+        label_map=label_map,
+        residual=residual,
+        stats=CoarsenStats(levels=tuple(stats), residual_n=n_cur,
+                           residual_m=m_cur),
+    )
+
+
+def _finalize(
+    prelude: CoarsenPrelude,
+    residual_parent: np.ndarray,
+    residual_eids: np.ndarray,
+    residual_weight: float,
+    residual_iters: int,
+    n0: int,
+    rounds_per_level: int,
+) -> MSFResult:
+    """Merge level picks with the residual solve into one MSFResult in
+    original-graph vertex/edge ids."""
+    all_eids = np.concatenate([prelude.msf_eids, residual_eids])
+    msf_eids = np.full(n0, _IMAX, np.int32)
+    msf_eids[: len(all_eids)] = all_eids
+    comp = residual_parent[prelude.label_map]  # [n0] residual-space labels
+    # Canonical original-vertex labels: min original vertex per component.
+    reps = np.full(len(residual_parent), n0, np.int64)
+    np.minimum.at(reps, comp, np.arange(n0))
+    parent = reps[comp].astype(np.int32)
+    return MSFResult(
+        weight=np.float32(prelude.weight + residual_weight),
+        parent=parent,
+        msf_eids=msf_eids,
+        n_msf_edges=np.int32(len(all_eids)),
+        iterations=np.int32(
+            len(prelude.stats.levels) * rounds_per_level + residual_iters
+        ),
+    )
+
+
+class CoarsenMSF:
+    """Reusable engine front-end: holds a config, records per-run stats.
+
+    ``msf_kw`` (variant/shortcut/capacity/pack/segmin/...) is forwarded
+    to the residual ``core.msf`` call; ``config`` controls the levels.
+    The result is expressed in input-graph ids: ``msf_eids`` are global
+    eids, and ``parent`` labels components by their minimum original
+    vertex.
+    """
+
+    def __init__(self, config: CoarsenConfig | None = None, **msf_kw):
+        self.config = config or CoarsenConfig()
+        # segmin only parameterizes the pack=True inner loop of core.msf;
+        # for a float residual it would be rejected there, so keep it for
+        # the levels (via config) but only forward alongside pack=True.
+        if not msf_kw.get("pack"):
+            msf_kw.pop("segmin", None)
+        self.msf_kw = msf_kw
+        self.last_stats: CoarsenStats | None = None
+
+    def __call__(self, graph: Graph) -> MSFResult:
+        prelude = run_levels(graph, self.config)
+        r = _flat_msf(prelude.residual, **self.msf_kw)
+        self.last_stats = prelude.stats
+        return _finalize(
+            prelude,
+            np.asarray(r.parent),
+            np.asarray(r.msf_eids)[: int(r.n_msf_edges)],
+            float(r.weight),
+            int(r.iterations),
+            graph.n,
+            self.config.rounds_per_level,
+        )
+
+
+def coarsen_msf(
+    graph: Graph,
+    *,
+    config: CoarsenConfig | None = None,
+    segmin: str | None = None,
+    **msf_kw,
+) -> MSFResult:
+    """One-shot form of :class:`CoarsenMSF`; ``segmin`` (when given)
+    applies to the level kernels — overriding ``config.segmin`` — and,
+    with ``pack=True``, the residual. Callers that need the per-level
+    :class:`CoarsenStats` should hold a :class:`CoarsenMSF` instance
+    (its ``last_stats`` is per-instance, not shared global state)."""
+    cfg = config or CoarsenConfig()
+    if segmin is not None:
+        cfg = dataclasses.replace(cfg, segmin=segmin)
+    return CoarsenMSF(cfg, segmin=segmin, **msf_kw)(graph)
+
+
+# ---------------------------------------------------------------------------
+# Partition2D-aware pre-contraction for the distributed engine
+# ---------------------------------------------------------------------------
+
+def precontract_partition(
+    graph: Graph,
+    rows: int,
+    cols: int,
+    *,
+    config: CoarsenConfig | None = None,
+) -> Tuple[Partition2D, CoarsenPrelude]:
+    """Coarsen first, then 2D-partition only the residual graph.
+
+    The paper's Fig-2 schedule pays all_gathers proportional to n and
+    local work proportional to the device's edge block — both shrink with
+    the contracted residual, so the distributed solve runs on a graph
+    whose n/m the levels already cut geometrically. Use
+    :func:`merge_distributed` to fold the ``msf_distributed`` result back
+    into original-graph ids.
+    """
+    prelude = run_levels(graph, config)
+    part = partition_edges_2d(prelude.residual, rows, cols)
+    return part, prelude
+
+
+def merge_distributed(prelude: CoarsenPrelude, dist_result) -> MSFResult:
+    """Combine a ``DistMSFResult`` over the residual with the prelude."""
+    cfg_rounds = 1  # iterations bookkeeping only; levels already counted
+    return _finalize(
+        prelude,
+        np.asarray(dist_result.parent),
+        np.asarray(dist_result.msf_eids)[: int(dist_result.n_msf_edges)],
+        float(dist_result.weight),
+        int(dist_result.iterations),
+        len(prelude.label_map),
+        cfg_rounds,
+    )

@@ -1,0 +1,169 @@
+"""Edge filtering between contraction levels (DESIGN.md §7.3).
+
+Relabels the edge list into supervertex space, drops self-loops (edges
+internal to a contracted component) and deduplicates parallel edges
+keeping the minimum-(w, eid)-lex representative. Dropping the heavier
+parallels is *exact* under the distinct (w, eid) total order: parallel
+supervertex edges close a cycle through the two contracted components,
+and the cycle property excludes every non-minimal one from the MSF.
+
+All-device, single jitted call with static shapes:
+
+1. canonical pair keys — packed uint32 ``lo << 16 | hi`` when n ≤ 2^16,
+   the (lo, hi) pair beyond (int64 keys are unavailable without
+   jax_enable_x64) — lexsorted with (w, eid) as trailing keys so each
+   pair run leads with its (w, eid)-lex minimum;
+2. sort → duplicate pairs become adjacent; segment ids by boundary-flag
+   prefix-sum (≤ E segments, independent of n′² — invalid entries sort
+   last into one dead segment, so live segments are already
+   front-compacted);
+3. per-segment MINWEIGHT via the pack32 segment-min (Pallas flat kernel
+   or ``jax.ops.segment_min``) in the integer-weight regime, the 3-pass
+   masked float reduction (``semiring.segment_argmin``) otherwise.
+   Caveat: this reduction has ``num_segments = E``, so the flat Pallas
+   kernel's compare-broadcast sweep costs O(E²/block_rows) lanes here —
+   acceptable only for modest levels; the segment ids are *sorted*, and
+   a contiguous-range kernel exploiting that is a ROADMAP follow-up
+   (``segmin=None``/"jnp" keeps this step at O(E) via segment_min);
+4. gather the winners' (lo, hi, w, global eid).
+
+Original global eids ride through untouched — the level output is still
+expressed in input-graph edge ids.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import INF, PACK_IDENTITY, pack32, unpack32, segment_argmin
+from repro.coarsen.relabel import relabel_edges
+
+#: largest vertex count for the packed uint32 pair-key sort path
+PAIR_PACK_LIMIT = 1 << 16
+
+
+class FilterResult(NamedTuple):
+    """Deduped canonical edges, indexed by segment (front-packed: entries
+    [0, m_new) are the live unique pairs, the rest carry valid=False)."""
+
+    lo: jax.Array  # int32 [E]
+    hi: jax.Array  # int32 [E]
+    w: jax.Array  # float32 [E]
+    eid: jax.Array  # int32 [E] — original global eids
+    valid: jax.Array  # bool [E]
+    m_new: jax.Array  # int32 scalar: number of unique live pairs
+
+
+@partial(jax.jit, static_argnames=("n", "pack", "segmin"))
+def filter_level(
+    und_lo: jax.Array,
+    und_hi: jax.Array,
+    w: jax.Array,
+    eid: jax.Array,
+    valid: jax.Array,
+    new_ids: jax.Array,
+    *,
+    n: int,
+    pack: bool = False,
+    segmin=None,
+) -> FilterResult:
+    """Relabel into supervertex space, drop self-loops, dedupe parallels.
+
+    Takes the *undirected* canonical arrays (one entry per edge, not the
+    symmetric directed form) — both directions relabel to the same
+    canonical pair, so sorting the directed form would double the
+    dominant argsort for no information. ``n`` is the previous level's
+    (static) vertex count — the bound on relabeled ids used for sort
+    sentinels. ``pack`` requires integral weights in [0, 255] and
+    E < 2^24 − 1 (the position index is packed).
+    """
+    e = und_lo.shape[0]
+    ns, nd = relabel_edges(new_ids, und_lo, und_hi)
+    lo = jnp.minimum(ns, nd)
+    hi = jnp.maximum(ns, nd)
+    real = valid & (lo != hi)
+
+    # Sort by (pair key, w, eid): duplicates become adjacent AND within
+    # each pair run the (w, eid)-lex minimum comes first, so the
+    # min-*position* winner below IS the (w, eid)-min representative —
+    # position alone would tie-break equal weights by array order, which
+    # stops tracking eid order after the first level.
+    if n <= PAIR_PACK_LIMIT:
+        key = (lo.astype(jnp.uint32) << 16) | hi.astype(jnp.uint32)
+        key = jnp.where(real, key, jnp.uint32(0xFFFFFFFF))
+        order = jnp.lexsort((eid, w, key))
+        key_s = key[order]
+        boundary = jnp.concatenate(
+            [jnp.ones((1,), bool), key_s[1:] != key_s[:-1]]
+        )
+    else:
+        lo_k = jnp.where(real, lo, jnp.int32(n))
+        hi_k = jnp.where(real, hi, jnp.int32(n))
+        order = jnp.lexsort((eid, w, hi_k, lo_k))
+        lo_ks, hi_ks = lo_k[order], hi_k[order]
+        boundary = jnp.concatenate(
+            [
+                jnp.ones((1,), bool),
+                (lo_ks[1:] != lo_ks[:-1]) | (hi_ks[1:] != hi_ks[:-1]),
+            ]
+        )
+    lo_s, hi_s = lo[order], hi[order]
+    w_s, eid_s = w[order], eid[order]
+    real_s = real[order]
+    seg = jnp.cumsum(boundary.astype(jnp.int32)) - 1  # [0, E) ranks
+    pos = jnp.arange(e, dtype=jnp.int32)
+
+    if pack:
+        w_int = jnp.where(real_s, w_s, 0.0).astype(jnp.uint32)
+        kmin = jnp.where(real_s, pack32(w_int, pos), PACK_IDENTITY)
+        if segmin is None:
+            minkey = jax.ops.segment_min(kmin, seg, num_segments=e)
+        else:
+            minkey = segmin(kmin, seg, e)
+        _, winner = unpack32(minkey)
+        seg_live = minkey != PACK_IDENTITY
+    else:
+        em = segment_argmin(w_s, pos, (), seg, e, valid=real_s)
+        winner = em.eid
+        seg_live = em.w < INF
+
+    sel = jnp.clip(winner, 0, e - 1)
+    return FilterResult(
+        lo=lo_s[sel],
+        hi=hi_s[sel],
+        w=w_s[sel],
+        eid=eid_s[sel],
+        valid=seg_live,
+        m_new=jnp.sum(seg_live.astype(jnp.int32)),
+    )
+
+
+def filter_level_host(lo, hi, w, eid, valid, new_ids, n: int):
+    """Host (numpy) twin of :func:`filter_level` — same policy, returns
+    compact unpadded arrays (lo, hi, w, eid).
+
+    The engine is host-driven between levels anyway, and numpy's lexsort
+    beats XLA's CPU sort by an order of magnitude, so this is the CPU
+    backend of the ``dedupe="auto"`` switch (the jitted pipeline is the
+    TPU path, where the sort and the pack32 segment-min stay on device).
+    """
+    import numpy as np
+
+    from repro.graphs.structures import canonical_edges, edge_keys
+
+    new_ids = np.asarray(new_ids)
+    ns, nd = new_ids[np.asarray(lo)], new_ids[np.asarray(hi)]
+    l, h, keep = canonical_edges(ns, nd)
+    real = np.asarray(valid) & keep
+    l, h = l[real], h[real]
+    w, eid = np.asarray(w)[real], np.asarray(eid)[real]
+    key = edge_keys(l, h, n)  # shared collision-free pair key
+    order = np.lexsort((eid, w, key))  # per pair: min (w, eid) first
+    key_s = key[order]
+    first = np.ones(len(key_s), bool)
+    first[1:] = key_s[1:] != key_s[:-1]
+    idx = order[first]
+    return l[idx], h[idx], w[idx], eid[idx]

@@ -1,0 +1,45 @@
+"""Device-side supervertex rank/relabel pass (DESIGN.md §7.2).
+
+After K hook+shortcut rounds every tree is a star, so the parent vector
+``p`` is a component labeling by *root vertex id*. Contraction renames
+each root to its **rank** — a dense prefix-sum over root indicators —
+producing contiguous supervertex ids in [0, n′). Fully jittable: one
+cumsum + two gathers, no host round-trip.
+
+Invariant threading: ``new_ids[v]`` is defined for every vertex (its
+root's rank), so edge relabeling and the original-vertex → supervertex
+``label_map`` composition are plain gathers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rank_relabel(p: jax.Array):
+    """Star-canonical parent vector → (new_ids, n_next).
+
+    new_ids: int32 [n], the supervertex id (root rank) of every vertex;
+    n_next: int32 scalar, the number of supervertices (= number of roots,
+    including isolated vertices, which stay their own supervertex).
+    """
+    n = p.shape[0]
+    i = jnp.arange(n, dtype=p.dtype)
+    is_root = p == i
+    rank = jnp.cumsum(is_root.astype(jnp.int32)) - 1  # root v ↦ #roots ≤ v − 1
+    new_ids = rank[p]  # every vertex inherits its root's rank
+    return new_ids, jnp.sum(is_root.astype(jnp.int32))
+
+
+def relabel_edges(new_ids: jax.Array, src: jax.Array, dst: jax.Array):
+    """Edge endpoints in the previous level's vertex space → supervertex ids."""
+    return new_ids[src], new_ids[dst]
+
+
+def compose_labels(label_map: jax.Array, new_ids: jax.Array) -> jax.Array:
+    """original vertex → current-level id, composed with one more level.
+
+    ``new_ids`` already routes through the level's parent vector
+    (new_ids[v] = rank of v's root), so composition is a single gather.
+    """
+    return new_ids[label_map]

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.core import shortcut as sc
 from repro.core.multilinear import (
     min_outgoing_coo,
+    min_outgoing_coo_packed,
     project_to_roots,
 )
 from repro.core.semiring import INF, IMAX
@@ -62,9 +63,12 @@ def starcheck(p: jax.Array) -> jax.Array:
     return s & s[p]
 
 
-def _hook_and_tiebreak(p, r_w, r_eid, r_parent):
+def hook_and_tiebreak(p, r_w, r_eid, r_parent):
     """Lines 11-13: hook star roots with their min outgoing edge, then break
-    the 2-cycles hooking introduces (larger root keeps the hook)."""
+    the 2-cycles hooking introduces (larger root keeps the hook).
+
+    Public because the coarsening engine (``repro.coarsen.contract``) runs
+    the same hook rounds outside the full MSF driver loop."""
     n = p.shape[0]
     i = jnp.arange(n, dtype=p.dtype)
     hooked = r_w < INF  # only roots receive a valid r entry
@@ -76,7 +80,7 @@ def _hook_and_tiebreak(p, r_w, r_eid, r_parent):
     return p_new, keep, t
 
 
-def _record_edges(msf_eids, n_f, keep, r_eid):
+def record_edges(msf_eids, n_f, keep, r_eid):
     """Append the surviving hook edges' eids to the MSF buffer."""
     n = keep.shape[0]
     pos = n_f + jnp.cumsum(keep.astype(jnp.int32)) - 1
@@ -87,9 +91,17 @@ def _record_edges(msf_eids, n_f, keep, r_eid):
 
 @partial(
     jax.jit,
-    static_argnames=("variant", "shortcut", "capacity", "max_iters", "unroll_guard"),
+    static_argnames=(
+        "variant",
+        "shortcut",
+        "capacity",
+        "max_iters",
+        "unroll_guard",
+        "pack",
+        "segmin",
+    ),
 )
-def msf(
+def _msf_jit(
     graph: Graph,
     *,
     parent0: jax.Array | None = None,
@@ -98,20 +110,10 @@ def msf(
     capacity: int = 1 << 16,
     max_iters: int | None = None,
     unroll_guard: bool = True,
+    pack: bool = False,
+    segmin=None,
 ) -> MSFResult:
-    """Compute the minimum spanning forest of ``graph``.
-
-    variant: "complete" | "paper" | "pairwise"
-    shortcut (complete variant only): "complete" | "csp" | "os"
-    parent0: optional warm-start parent vector — the re-entrant form for
-      callers that maintain their own component labels (e.g. an incremental
-      connectivity refresh). Hooking starts from these components instead
-      of singletons, so the returned ``weight``/``msf_eids`` cover only the
-      edges hooked *during this call*. Note the streaming engine's
-      ``insert_batch`` deliberately starts cold: a warm start cannot evict
-      a heavier pre-existing forest edge from a cycle (DESIGN.md §6.1).
-      Any forest labeling works — it is canonicalized to stars first.
-    """
+    """Jitted MSF driver — see :func:`msf` for the public entry point."""
     n = graph.n
     src, dst, w, eid, valid = graph.src, graph.dst, graph.w, graph.eid, graph.valid
     if parent0 is None:
@@ -147,11 +149,15 @@ def msf(
             from repro.core.semiring import segment_argmin
 
             r = segment_argmin(m_w, m_eid, (m_pd,), ps, n, valid=outgoing)
+        elif pack:
+            r = min_outgoing_coo_packed(
+                p, src, dst, w, eid, valid, n, segmin=segmin
+            )
         else:
             r = min_outgoing_coo(p, src, dst, w, eid, valid, n, segment="root")
-        p_h, keep, _ = _hook_and_tiebreak(p, r.w, r.eid, r.payload[0])
+        p_h, keep, _ = hook_and_tiebreak(p, r.w, r.eid, r.payload[0])
         total = total + jnp.sum(jnp.where(keep, r.w, 0.0))
-        msf_eids, n_f = _record_edges(msf_eids, n_f, keep, r.eid)
+        msf_eids, n_f = record_edges(msf_eids, n_f, keep, r.eid)
         p_next = shortcut_fn(p_h, p_prev)
         done = jnp.all(p_next == p_prev)
         return p_next, total, msf_eids, n_f, it + 1, done
@@ -162,9 +168,9 @@ def msf(
         s = starcheck(p)
         q = min_outgoing_coo(p, src, dst, w, eid, valid, n, segment="vertex", star=s)
         r = project_to_roots(q, p, n)
-        p_h, keep, _ = _hook_and_tiebreak(p, r.w, r.eid, r.payload[0])
+        p_h, keep, _ = hook_and_tiebreak(p, r.w, r.eid, r.payload[0])
         total = total + jnp.sum(jnp.where(keep, r.w, 0.0))
-        msf_eids, n_f = _record_edges(msf_eids, n_f, keep, r.eid)
+        msf_eids, n_f = record_edges(msf_eids, n_f, keep, r.eid)
         s2 = starcheck(p_h)
         p_next = sc.shortcut_once(p_h, s2)
         done = jnp.all(p_next == p_prev)
@@ -188,6 +194,51 @@ def msf(
     p, total, msf_eids, n_f, it, _ = jax.lax.while_loop(cond, body, init)
     p = sc.complete_shortcut(p)  # canonical labels (complete variant: no-op)
     return MSFResult(weight=total, parent=p, msf_eids=msf_eids, n_msf_edges=n_f, iterations=it)
+
+
+def msf(
+    graph: Graph,
+    *,
+    coarsen=None,
+    segmin: str | None = None,
+    **kw,
+) -> MSFResult:
+    """Compute the minimum spanning forest of ``graph``.
+
+    variant: "complete" | "paper" | "pairwise"
+    shortcut (complete variant only): "complete" | "csp" | "os"
+    parent0: optional warm-start parent vector — the re-entrant form for
+      callers that maintain their own component labels (e.g. an incremental
+      connectivity refresh). Hooking starts from these components instead
+      of singletons, so the returned ``weight``/``msf_eids`` cover only the
+      edges hooked *during this call*. Note the streaming engine's
+      ``insert_batch`` deliberately starts cold: a warm start cannot evict
+      a heavier pre-existing forest edge from a cycle (DESIGN.md §6.1).
+      Any forest labeling works — it is canonicalized to stars first.
+    pack: use the pack32 single-reduction inner loop (integer weights in
+      [0, 255], eids < 2^24 − 1 — the paper's evaluation regime).
+    segmin: packed segment-min backend for ``pack=True`` — "jnp",
+      "pallas", or "auto" / None (Pallas on TPU, interpret elsewhere only
+      when forced; see ``kernels.ops.make_packed_segmin``).
+    coarsen: None for the flat solver, or a
+      ``repro.coarsen.CoarsenConfig`` (or ``True`` for defaults) to run
+      Borůvka contract-and-filter levels first and hand only the residual
+      graph to this driver (DESIGN.md §7). Incompatible with ``parent0``.
+    """
+    if coarsen is not None and coarsen is not False:
+        from repro.coarsen.engine import coarsen_msf  # lazy: avoid cycle
+
+        if kw.get("parent0") is not None:
+            raise ValueError("coarsen= cannot be combined with parent0=")
+        config = None if coarsen is True else coarsen
+        return coarsen_msf(graph, config=config, segmin=segmin, **kw)
+    if kw.get("pack"):
+        from repro.kernels.ops import make_packed_segmin  # lazy: kernels layer
+
+        kw["segmin"] = make_packed_segmin(segmin or "auto")
+    elif segmin not in (None, "auto"):
+        raise ValueError("segmin= only applies to the pack=True inner loop")
+    return _msf_jit(graph, **kw)
 
 
 def msf_weight(graph: Graph, **kw) -> float:

@@ -77,6 +77,51 @@ def project_to_roots(q: EdgeMin, p: jax.Array, n: int) -> EdgeMin:
     return segment_argmin(q.w, q.eid, q.payload, p, n, valid=q.w < INF)
 
 
+def min_outgoing_coo_packed(
+    p: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    eid: jax.Array,
+    valid: jax.Array,
+    n: int,
+    *,
+    segmin=None,
+) -> EdgeMin:
+    """pack32 fast path of :func:`min_outgoing_coo` (root-segment form).
+
+    Valid in the paper's integer-weight regime: ``w`` integral in
+    [0, 255] and ``eid < 2^24 - 1`` (strict — pack32(255, 2^24-1) would
+    collide with the 0xFFFFFFFF identity). The (w, eid) MINWEIGHT key
+    packs into one uint32, so the per-iteration reduction is a SINGLE
+    segment-min on the packed key plus one masked payload pass — and
+    ``segmin`` lets callers swap in the Pallas flat kernel
+    (``kernels.ops.make_packed_segmin``) for that dominant reduction.
+    """
+    from repro.core.semiring import PACK_IDENTITY, pack32, unpack32
+
+    ps = p[src]
+    pd = p[dst]
+    outgoing = (ps != pd) & valid
+    # Mask weights BEFORE the uint32 cast: padding carries +inf, whose
+    # float→uint conversion is implementation-defined.
+    w_int = jnp.where(outgoing, w, 0.0).astype(jnp.uint32)
+    key = jnp.where(outgoing, pack32(w_int, eid), PACK_IDENTITY)
+    if segmin is None:
+        minkey = jax.ops.segment_min(key, ps, num_segments=n)
+    else:
+        minkey = segmin(key, ps, n)
+    w_out, eid_out = unpack32(minkey)
+    winner = outgoing & (key == minkey[ps])
+    pay = jax.ops.segment_min(jnp.where(winner, pd, IMAX), ps, num_segments=n)
+    empty = minkey == PACK_IDENTITY
+    return EdgeMin(
+        w=jnp.where(empty, INF, w_out.astype(jnp.float32)),
+        eid=jnp.where(empty, IMAX, eid_out),
+        payload=(pay,),
+    )
+
+
 def min_outgoing_dense(
     p: jax.Array, a: jax.Array, star: jax.Array | None = None
 ) -> EdgeMin:

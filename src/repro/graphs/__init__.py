@@ -4,6 +4,7 @@ from repro.graphs.structures import (
     dedupe_canonical,
     edge_keys,
     from_edges,
+    graph_from_canonical,
     to_csr,
 )
 from repro.graphs.generators import (

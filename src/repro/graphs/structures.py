@@ -125,6 +125,29 @@ def from_edges(u: np.ndarray, v: np.ndarray, w: np.ndarray, n: int) -> Graph:
     )
 
 
+def graph_from_canonical(lo, hi, w, eid, valid, n: int) -> Graph:
+    """Symmetric ``Graph`` from canonical undirected arrays, preserving the
+    caller's global eids (unlike :func:`from_edges`, which renumbers).
+
+    Used by the coarsening engine: contracted levels carry the *original*
+    input-graph eids through relabel/filter so the final MSF edge set is
+    reported in input ids. Arrays may be padded (``valid`` masks).
+    """
+    lo = np.asarray(lo, np.int32)
+    hi = np.asarray(hi, np.int32)
+    w = np.asarray(w, np.float32)
+    eid = np.asarray(eid, np.int32)
+    valid = np.asarray(valid, bool)
+    return Graph(
+        src=np.concatenate([lo, hi]),
+        dst=np.concatenate([hi, lo]),
+        w=np.concatenate([w, w]),
+        eid=np.concatenate([eid, eid]),
+        valid=np.concatenate([valid, valid]),
+        n=int(n),
+    )
+
+
 def to_csr(graph: Graph) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Return (indptr, indices, weights, eids) CSR views of the valid edges."""
     src = np.asarray(graph.src)

@@ -6,14 +6,17 @@ logic. On a TPU backend they compile to Mosaic.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.multilinear_dense import multilinear_dense_pallas
-from repro.kernels.segment_min_bucketed import segment_min_bucketed_pallas
+from repro.kernels.segment_min_bucketed import (
+    segment_min_bucketed_pallas,
+    segment_min_flat_pallas,
+)
 
 INF = jnp.float32(jnp.inf)
 IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
@@ -70,6 +73,69 @@ def segment_min_bucketed(
     return segment_min_bucketed_pallas(
         keys, rows, block_rows=block_rows, interpret=_use_interpret(interpret)
     )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("num_segments", "block_rows", "block_edges", "interpret"),
+)
+def segment_min_flat(
+    keys: jax.Array,
+    segs: jax.Array,
+    *,
+    num_segments: int,
+    block_rows: int = 128,
+    block_edges: int = 512,
+    interpret: bool | None = None,
+):
+    """Flat packed-key segment-min over arbitrary (unsorted) segment ids.
+
+    Pads the edge dimension to a block_edges multiple (identity keys) and
+    the segment dimension to a block_rows multiple, then slices back — the
+    caller keeps natural shapes.
+    """
+    e = keys.shape[0]
+    e_pad = max(block_edges, -(-e // block_edges) * block_edges)
+    s_pad = max(block_rows, -(-num_segments // block_rows) * block_rows)
+    keys_p = jnp.full((e_pad,), UMAX, jnp.uint32).at[:e].set(keys)
+    segs_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(segs)
+    out = segment_min_flat_pallas(
+        keys_p,
+        segs_p,
+        num_segments=s_pad,
+        block_rows=block_rows,
+        block_edges=block_edges,
+        interpret=_use_interpret(interpret),
+    )
+    return out[:num_segments]
+
+
+@lru_cache(maxsize=None)
+def make_packed_segmin(backend: str = "auto"):
+    """Resolve a packed (uint32 key, int32 seg) → uint32 [n] segment-min.
+
+    ``backend``: "jnp" (pure-JAX ``segment_min``), "pallas" (the flat
+    Pallas kernel, ``interpret=True`` selected automatically off
+    ``jax.default_backend()``), or "auto" (pallas on TPU, jnp elsewhere —
+    interpreted Pallas is orders of magnitude slower than XLA on CPU, so
+    auto never picks it there).
+
+    Cached so repeat calls return the *same* callable — callers pass the
+    result as a jit-static argument and must not miss the jit cache.
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        def _jnp(keys, segs, num_segments):
+            return jax.ops.segment_min(keys, segs, num_segments=num_segments)
+
+        return _jnp
+    if backend == "pallas":
+        def _pallas(keys, segs, num_segments):
+            return segment_min_flat(keys, segs, num_segments=num_segments)
+
+        return _pallas
+    raise ValueError(f"unknown segment-min backend {backend!r}")
 
 
 def bucket_edges_by_row_block(

@@ -43,3 +43,13 @@ def segment_min_bucketed_ref(keys: jax.Array, rows: jax.Array, block_rows: int):
     eq = rows[:, None, :] == r[None, :, None]
     vals = jnp.where(eq, keys[:, None, :], UMAX)
     return jnp.min(vals, axis=2).reshape(nb * block_rows)
+
+
+def segment_min_flat_ref(keys: jax.Array, segs: jax.Array, num_segments: int):
+    """Oracle for the flat-layout packed segment-min kernel.
+
+    keys: uint32 [E] (UMAX = identity/padding); segs: int32 [E] global
+    segment ids. Returns uint32 [num_segments] (UMAX at empty segments —
+    ``segment_min``'s identity for uint32 is the dtype max).
+    """
+    return jax.ops.segment_min(keys, segs, num_segments=num_segments)

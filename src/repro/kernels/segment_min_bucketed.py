@@ -1,15 +1,24 @@
-"""Pallas TPU kernel: bucketed packed-key segment-min (sparse MSF path).
+"""Pallas TPU kernels: packed-key segment-min (sparse MSF path).
 
 TPU adaptation of the paper's sparse multilinear kernel: TPUs have no
-vectorized scatter, so instead of CRCW min-writes we pre-bucket edges by
-output row block (host side, part of graph partitioning) and reduce each
-bucket with a compare-broadcast-min over an (BI, BE) VMEM tile:
+vectorized scatter, so instead of CRCW min-writes we reduce with a
+compare-broadcast-min over (BI, BE) VMEM tiles:
 
-    out[r] = min over bucket edges e { keys[e] : rows[e] == r }
+    out[r] = min over edges e { keys[e] : seg[e] == r }
 
 Keys are the pack32 layout (weight << 24 | idx) from ``repro.core.semiring``
 — a single uint32 min implements the full MINWEIGHT monoid in the paper's
 integer-weight regime. Identity/padding = 0xFFFFFFFF.
+
+Two layouts:
+
+- ``segment_min_bucketed_pallas`` — edges pre-bucketed by output row block
+  (host side, part of graph partitioning); one grid step per bucket.
+- ``segment_min_flat_pallas``     — flat [E] edge arrays with arbitrary
+  (possibly unsorted) segment ids, as produced *inside* jit by the MSF
+  hook loop and the coarsening dedupe; grid = (row blocks, edge blocks),
+  the row block's output tile stays resident in VMEM and accumulates the
+  min across the sequential edge-block dimension.
 """
 from __future__ import annotations
 
@@ -32,6 +41,24 @@ def _kernel(keys_ref, rows_ref, out_ref, *, block_rows, block_edges):
     out_ref[...] = jnp.min(vals, axis=1)
 
 
+def _validate_blocked(keys, rows, block_rows: int) -> None:
+    """Shared shape/dtype validation — loud errors instead of silent wrong
+    shapes (a mis-sized bucket used to produce garbage rows)."""
+    if keys.shape != rows.shape:
+        raise ValueError(
+            f"keys/rows shape mismatch: {keys.shape} vs {rows.shape}"
+        )
+    if keys.dtype != jnp.uint32:
+        raise ValueError(f"keys must be uint32 (pack32 layout), got {keys.dtype}")
+    if rows.dtype != jnp.int32:
+        raise ValueError(f"rows must be int32, got {rows.dtype}")
+    if block_rows <= 0 or block_rows % 8:
+        raise ValueError(
+            f"block_rows must be a positive multiple of 8 (TPU sublane), "
+            f"got {block_rows}"
+        )
+
+
 def segment_min_bucketed_pallas(
     keys: jax.Array,
     rows: jax.Array,
@@ -41,7 +68,17 @@ def segment_min_bucketed_pallas(
 ):
     """keys uint32 [NB, BE]; rows int32 [NB, BE] (local row in the bucket's
     block). Returns uint32 [NB * block_rows]."""
+    _validate_blocked(keys, rows, block_rows)
+    if keys.ndim != 2:
+        raise ValueError(f"expected [NB, BE] bucketed layout, got {keys.shape}")
     nb, be = keys.shape
+    if nb == 0 or be == 0:
+        raise ValueError(
+            f"empty bucket layout {keys.shape}; pad each bucket to >= 128 "
+            f"lanes (see kernels.ops.bucket_edges_by_row_block)"
+        )
+    if be % 128:
+        raise ValueError(f"bucket edge dim {be} must be a multiple of 128 lanes")
     kernel = functools.partial(_kernel, block_rows=block_rows, block_edges=be)
     return pl.pallas_call(
         kernel,
@@ -54,3 +91,80 @@ def segment_min_bucketed_pallas(
         out_shape=jax.ShapeDtypeStruct((nb * block_rows,), jnp.uint32),
         interpret=interpret,
     )(keys, rows)
+
+
+def _flat_kernel(keys_ref, segs_ref, out_ref, *, block_rows, block_edges):
+    rb = pl.program_id(0)
+    eb = pl.program_id(1)
+
+    @pl.when(eb == 0)
+    def _init():
+        out_ref[...] = jnp.full((block_rows,), UMAX, jnp.uint32)
+
+    keys = keys_ref[0, :]  # [BE] uint32
+    segs = segs_ref[0, :]  # [BE] int32, *global* segment ids
+    local = segs - rb * block_rows
+    r = jax.lax.broadcasted_iota(jnp.int32, (block_rows, block_edges), 0)
+    eq = local[None, :] == r
+    vals = jnp.where(eq, keys[None, :], UMAX)
+    out_ref[...] = jnp.minimum(out_ref[...], jnp.min(vals, axis=1))
+
+
+def segment_min_flat_pallas(
+    keys: jax.Array,
+    segs: jax.Array,
+    *,
+    num_segments: int,
+    block_rows: int = 128,
+    block_edges: int = 512,
+    interpret: bool = False,
+):
+    """Flat-layout packed segment-min: keys uint32 [E], segs int32 [E] with
+    values in [0, num_segments). Returns uint32 [num_segments].
+
+    The output row block is revisited across the (sequential) edge-block
+    grid dimension and accumulates with ``min`` — the TPU-legal stand-in
+    for a CRCW min-write. Cost is O(num_segments / block_rows × E) lane
+    compares; callers with a host-side bucketing opportunity should prefer
+    ``segment_min_bucketed_pallas``.
+    """
+    _validate_blocked(keys, segs, block_rows)
+    if keys.ndim != 1:
+        raise ValueError(f"expected flat [E] layout, got {keys.shape}")
+    # Stricter than the %8 of _validate_blocked: both the edge tile's
+    # last dim and the 1-D output tile land on TPU lanes — enforce the
+    # 128 multiple here rather than deep inside Mosaic compilation.
+    if block_edges % 128:
+        raise ValueError(f"block_edges={block_edges} must be a multiple of 128 lanes")
+    if block_rows % 128:
+        raise ValueError(
+            f"block_rows={block_rows} must be a multiple of 128 (1-D output tile)"
+        )
+    e = keys.shape[0]
+    if e == 0:
+        raise ValueError("empty edge array; pad to >= one block of edges")
+    if e % block_edges:
+        raise ValueError(
+            f"edge count {e} must be a multiple of block_edges={block_edges} "
+            f"(pad with identity keys)"
+        )
+    if num_segments <= 0 or num_segments % block_rows:
+        raise ValueError(
+            f"num_segments={num_segments} must be a positive multiple of "
+            f"block_rows={block_rows} (pad the output)"
+        )
+    kernel = functools.partial(
+        _flat_kernel, block_rows=block_rows, block_edges=block_edges
+    )
+    ne = e // block_edges
+    return pl.pallas_call(
+        kernel,
+        grid=(num_segments // block_rows, ne),
+        in_specs=[
+            pl.BlockSpec((1, block_edges), lambda rb, eb: (eb, 0)),
+            pl.BlockSpec((1, block_edges), lambda rb, eb: (eb, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda rb, eb: (rb,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), jnp.uint32),
+        interpret=interpret,
+    )(keys.reshape(ne, block_edges), segs.reshape(ne, block_edges))

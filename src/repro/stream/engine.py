@@ -16,7 +16,14 @@ over a *fixed-capacity* union buffer of exactly
     forest_capacity + batch_capacity  =  (n − 1) + B_cap
 
 undirected slots — O(n + |B|) instead of O(m) work, and one compiled
-executable for every batch size (padding, not re-tracing).
+executable for every batch size (padding, not re-tracing). With
+``adaptive_capacity`` the batch slots instead track observed batch sizes
+by powers of two (bounded recompiles, reported via
+``UpdateStats.recompiles``). The MSF inner loop runs the pack32
+single-reduction path whenever weights stay in the paper's integral
+[0, 255] regime, with the packed segment-min swappable for the Pallas
+flat kernel (``segmin="pallas"``; ``interpret=True`` is selected
+automatically off ``jax.default_backend()``).
 
 Deletions are **tombstoned**: the edge is marked dead, excluded from the
 live index, and the published snapshot is re-issued with ``stale=True``.
@@ -36,8 +43,10 @@ from typing import NamedTuple
 import numpy as np
 
 from repro.core.msf import msf
+from repro.core.semiring import PACK_IDX_MASK
 from repro.graphs.structures import Graph
 from repro.stream import delta
+from repro.stream.service import next_pow2
 from repro.stream.snapshot import SnapshotStore, make_snapshot
 
 
@@ -51,6 +60,8 @@ class UpdateStats(NamedTuple):
     n_drop: int  # batch duplicates that changed nothing
     iterations: int  # MSF hook/shortcut iterations for this update
     union_directed_edges: int  # traced edge-buffer size of the update
+    batch_capacity: int = 0  # padded batch slots used for this update
+    recompiles: int = 0  # cumulative distinct union-buffer shapes compiled
 
 
 class DeleteStats(NamedTuple):
@@ -66,9 +77,26 @@ class StreamingMSF:
     Parameters
     ----------
     n: vertex count (static — defines every buffer shape).
-    batch_capacity: max undirected edges per insert batch; also the pad
-        target, so every batch reuses one compiled MSF executable.
+    batch_capacity: max undirected edges per insert batch; without
+        ``adaptive_capacity`` also the pad target, so every batch reuses
+        one compiled MSF executable.
+    adaptive_capacity: grow/shrink the padded batch slots by powers of two
+        tracking observed batch sizes (floor ``min_capacity``, ceiling
+        ``batch_capacity``). Small batches then pay for a small union
+        buffer at the cost of a bounded number of recompiles
+        (≤ log2(batch_capacity / min_capacity) shapes each way), surfaced
+        as ``UpdateStats.recompiles``.
     compact_trigger: tombstoned-fraction threshold that forces compaction.
+    pack: use the pack32 single-reduction MSF inner loop. ``None`` (auto)
+        enables it while every inserted weight has been integral in
+        [0, 255] (the paper's regime — tracked incrementally, so one
+        fractional batch permanently falls back to the 3-pass float
+        reduction); ``True`` asserts it and rejects unpackable batches.
+    segmin: packed segment-min backend for the inner loop — "jnp",
+        "pallas" (the flat Pallas kernel, ``interpret=True`` selected
+        automatically off ``jax.default_backend()``) or "auto" (Pallas
+        only on TPU — interpreted Pallas on CPU is orders of magnitude
+        slower than XLA's segment_min).
     variant / shortcut / capacity: forwarded to ``repro.core.msf``.
     """
 
@@ -77,7 +105,11 @@ class StreamingMSF:
         n: int,
         batch_capacity: int = 1024,
         *,
+        adaptive_capacity: bool = False,
+        min_capacity: int = 16,
         compact_trigger: float = 0.25,
+        pack: bool | None = None,
+        segmin: str = "auto",
         variant: str = "complete",
         shortcut: str = "complete",
         capacity: int = 1 << 16,
@@ -91,6 +123,22 @@ class StreamingMSF:
         self.forest_capacity = self.n - 1
         self.compact_trigger = float(compact_trigger)
         self._msf_opts = dict(variant=variant, shortcut=shortcut, capacity=capacity)
+        self._pack = pack
+        self._segmin = segmin
+        self._packable = True  # conjunction over every inserted batch
+        self.adaptive_capacity = bool(adaptive_capacity)
+        self._min_capacity = min(next_pow2(min_capacity, 1), self.batch_capacity)
+        self._cap_cur = (
+            self._min_capacity if adaptive_capacity else self.batch_capacity
+        )
+        self._recent: list[int] = []  # last few observed batch sizes
+        self._union_shapes: set = set()  # distinct compiled union shapes
+        if pack is True and self.forest_capacity + self.batch_capacity >= PACK_IDX_MASK:
+            raise ValueError(
+                f"pack=True needs union eids < 2^24 - 1; (n - 1) + "
+                f"batch_capacity = {self.forest_capacity + self.batch_capacity} "
+                f"overflows the pack32 index field"
+            )
 
         fc = self.forest_capacity
         # Host-side forest store (compact: rows [0, _count) are live-or-dead).
@@ -116,8 +164,19 @@ class StreamingMSF:
 
     @property
     def union_edge_capacity(self) -> int:
-        """Undirected slots per update — the (n − 1) + B_cap bound."""
-        return self.forest_capacity + self.batch_capacity
+        """Undirected slots per update — the (n − 1) + B_cur bound (B_cur
+        follows observed batch sizes under ``adaptive_capacity``)."""
+        return self.forest_capacity + self._cap_cur
+
+    @property
+    def recompiles(self) -> int:
+        """Distinct (union-buffer shape, pack mode) executables compiled
+        so far — 1 at fixed capacity and stable pack mode; the auto-pack
+        flip after a fractional batch adds one, and adaptive capacity
+        adds one per newly-visited pow2 size. Oscillating between
+        already-seen keys hits jit's executable cache and does not
+        count."""
+        return len(self._union_shapes)
 
     @property
     def version(self) -> int:
@@ -155,6 +214,7 @@ class StreamingMSF:
                 f"batch of {pb.count} unique edges exceeds batch_capacity="
                 f"{self.batch_capacity}; split the batch or raise the capacity"
             )
+        self._note_batch(pb)
         plan = delta.classify_batch(
             pb, self._live_keys, self._live_w, self.n, self.batch_capacity
         )
@@ -181,6 +241,8 @@ class StreamingMSF:
             n_drop=plan.n_drop + pb.dropped,
             iterations=int(r.iterations),
             union_directed_edges=self.last_union_shape[0],
+            batch_capacity=self._cap_cur,
+            recompiles=self.recompiles,
         )
 
     def delete_batch(self, u, v) -> DeleteStats:
@@ -250,11 +312,49 @@ class StreamingMSF:
             n_drop=0,
             iterations=int(r.iterations),
             union_directed_edges=self.last_union_shape[0],
+            batch_capacity=self._cap_cur,
+            recompiles=self.recompiles,
         )
 
     # ------------------------------------------------------------------
     # internals
     # ------------------------------------------------------------------
+
+    def _note_batch(self, pb) -> None:
+        """Track packability and (if adaptive) resize the padded batch
+        slots by powers of two off the observed batch sizes."""
+        if pb.count:
+            wb = pb.w
+            ok = bool(
+                np.all(wb == np.floor(wb)) and wb.min() >= 0 and wb.max() <= 255
+            )
+            if not ok and self._pack is True:
+                raise ValueError(
+                    "pack=True requires integral weights in [0, 255]; "
+                    "construct with pack=None/False for general weights"
+                )
+            self._packable = self._packable and ok
+        if not self.adaptive_capacity:
+            return
+        self._recent.append(pb.count)
+        del self._recent[:-8]  # sliding window
+        need = min(next_pow2(pb.count, self._min_capacity), self.batch_capacity)
+        if need > self._cap_cur:
+            self._cap_cur = need  # grow immediately: the batch must fit
+        elif (
+            self._cap_cur > self._min_capacity
+            and max(self._recent) <= self._cap_cur // 4
+        ):
+            # Shrink one step with 4x hysteresis so an oscillating load
+            # doesn't thrash executables.
+            self._cap_cur = max(self._min_capacity, self._cap_cur // 2)
+
+    def _use_pack(self) -> bool:
+        if self._pack is not None:
+            return self._pack
+        # Local union eids stay < U; strict 24-bit bound avoids the
+        # pack32(255, 2^24−1) == identity collision.
+        return self._packable and self.union_edge_capacity < PACK_IDX_MASK
 
     def _run_union(self, b_lo, b_hi, b_w, b_gid):
         """MSF over (live forest ∪ batch) in the fixed-capacity union
@@ -285,8 +385,17 @@ class StreamingMSF:
             valid=np.concatenate([valid_u, valid_u]),
             n=self.n,
         )
+        use_pack = self._use_pack()
+        # pack is a jit-static arg: flipping it re-traces even at an
+        # already-seen buffer shape, so it is part of the executable key.
+        self._union_shapes.add((tuple(g.src.shape), use_pack))
         self.last_union_shape = tuple(g.src.shape)
-        r = msf(g, **self._msf_opts)
+        r = msf(
+            g,
+            pack=use_pack,
+            segmin=self._segmin if use_pack else None,
+            **self._msf_opts,
+        )
 
         n_f = int(r.n_msf_edges)
         sel = np.asarray(r.msf_eids)[:n_f]  # local union indices → rows

@@ -1,0 +1,263 @@
+"""Coarsening subsystem: contract/relabel/filter units, end-to-end parity
+with the flat solver (weight, MSF edge set in global eids, partition),
+pack32/Pallas dedupe backends, the msf(coarsen=) dispatcher, and the
+Partition2D-aware distributed pre-contraction hook (DESIGN.md §7)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.coarsen import (
+    CoarsenConfig,
+    CoarsenMSF,
+    coarsen_msf,
+    contract_level,
+    filter_level,
+    merge_distributed,
+    precontract_partition,
+    rank_relabel,
+)
+from repro.coarsen.filter import filter_level_host
+from repro.core.msf import msf
+from repro.graphs import grid_road_graph, random_graph, rmat_graph
+from repro.graphs.generators import components_graph
+from repro.graphs.structures import (
+    from_edges,
+    nx_free_msf_weight,
+    nx_free_n_components,
+)
+
+GRAPHS = {
+    "random": random_graph(300, 900, seed=1),
+    "grid_road": grid_road_graph(18, 20, seed=2),
+    "rmat": rmat_graph(9, 4, seed=3),
+    "components": components_graph(6, 50, seed=5),
+}
+
+
+def _eids(r):
+    return set(np.asarray(r.msf_eids)[: int(r.n_msf_edges)].tolist())
+
+
+def _same_partition(a, b):
+    fwd, bwd = {}, {}
+    for x, y in zip(np.asarray(a), np.asarray(b)):
+        if fwd.setdefault(int(x), int(y)) != int(y):
+            return False
+        if bwd.setdefault(int(y), int(x)) != int(x):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# units
+# ---------------------------------------------------------------------------
+
+
+def test_rank_relabel_dense_prefix_sum():
+    p = jnp.array([0, 0, 2, 2, 4, 4, 4, 7], jnp.int32)  # roots 0, 2, 4, 7
+    new_ids, n_next = rank_relabel(p)
+    assert int(n_next) == 4
+    np.testing.assert_array_equal(
+        np.asarray(new_ids), [0, 0, 1, 1, 2, 2, 2, 3]
+    )
+
+
+def test_filter_drops_self_loops_and_keeps_min_parallel():
+    # two supervertices {0,1} and {2,3}; three cross edges, one internal
+    lo = jnp.array([0, 0, 1, 0], jnp.int32)
+    hi = jnp.array([2, 3, 2, 1], jnp.int32)
+    w = jnp.array([5.0, 3.0, 9.0, 1.0], jnp.float32)
+    eid = jnp.array([10, 11, 12, 13], jnp.int32)
+    valid = jnp.ones(4, bool)
+    new_ids = jnp.array([0, 0, 1, 1], jnp.int32)
+    fr = filter_level(lo, hi, w, eid, valid, new_ids, n=4)
+    m = int(fr.m_new)
+    assert m == 1  # one unique supervertex pair survives
+    assert bool(fr.valid[0]) and int(fr.eid[0]) == 11  # min-weight rep, eid kept
+    assert float(fr.w[0]) == 3.0
+    # host twin agrees
+    l2, h2, w2, e2 = filter_level_host(lo, hi, w, eid, valid, new_ids, 4)
+    assert len(l2) == 1 and e2[0] == 11 and w2[0] == 3.0
+
+
+@pytest.mark.parametrize("pack", [False, True])
+def test_filter_equal_weight_ties_break_on_eid_not_position(pack):
+    """Regression: equal-weight parallel edges whose array order disagrees
+    with eid order must still dedupe to the smaller *eid* (the (w, eid)
+    total order) — position-based tie-breaks diverge from flat msf once
+    filter output order stops tracking eid order (level ≥ 2)."""
+    lo = jnp.array([0, 0], jnp.int32)
+    hi = jnp.array([2, 3], jnp.int32)
+    w = jnp.array([7.0, 7.0], jnp.float32)
+    eid = jnp.array([20, 10], jnp.int32)  # larger eid first in the array
+    valid = jnp.ones(2, bool)
+    new_ids = jnp.array([0, 0, 1, 1], jnp.int32)
+    fr = filter_level(lo, hi, w, eid, valid, new_ids, n=4, pack=pack)
+    assert int(fr.m_new) == 1 and int(fr.eid[0]) == 10
+    _, _, _, e2 = filter_level_host(lo, hi, w, eid, valid, new_ids, 4)
+    assert e2[0] == 10
+
+
+@pytest.mark.parametrize("pack", [False, True])
+def test_filter_device_host_parity(pack):
+    rng = np.random.default_rng(7)
+    n, m = 64, 256
+    lo = rng.integers(0, n, m).astype(np.int32)
+    hi = rng.integers(0, n, m).astype(np.int32)
+    # few weight levels + shuffled eids: the dedupe must break the many
+    # resulting ties on eid, not on array position
+    w = rng.integers(1, 8, m).astype(np.float32)
+    eid = rng.permutation(m).astype(np.int32)
+    valid = rng.random(m) < 0.9
+    new_ids = rng.integers(0, 16, n).astype(np.int32)
+    fr = filter_level(lo, hi, w, eid, valid, new_ids, n=n, pack=pack)
+    m_dev = int(fr.m_new)
+    dev = sorted(
+        zip(
+            np.asarray(fr.lo)[:m_dev].tolist(),
+            np.asarray(fr.hi)[:m_dev].tolist(),
+            np.asarray(fr.eid)[:m_dev].tolist(),
+        )
+    )
+    l2, h2, _, e2 = filter_level_host(lo, hi, w, eid, valid, new_ids, n)
+    host = sorted(zip(l2.tolist(), h2.tolist(), e2.tolist()))
+    assert dev == host
+
+
+def test_contract_level_rounds_shrink():
+    g = random_graph(256, 1024, seed=11)
+    res1 = contract_level(
+        g.src, g.dst, g.w, g.eid, g.valid, n=g.n, rounds=1
+    )
+    res2 = contract_level(
+        g.src, g.dst, g.w, g.eid, g.valid, n=g.n, rounds=2
+    )
+    # each round at least halves every component with outgoing edges
+    assert int(res1.n_next) <= g.n // 2 + 1
+    assert int(res2.n_next) <= int(res1.n_next)
+    # hooked edges are real MSF edges: subset of the flat solver's picks
+    flat = _eids(msf(g))
+    assert _eids(res2).issubset(flat)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        CoarsenConfig(rounds_per_level=0)
+    with pytest.raises(ValueError):
+        CoarsenConfig(cutoff=0)
+    with pytest.raises(ValueError):
+        CoarsenConfig(dedupe="gpu")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity with the flat solver
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+@pytest.mark.parametrize("dedupe", ["host", "device"])
+def test_coarsen_matches_flat(gname, dedupe):
+    """Acceptance: same weight AND same MSF edge set (global eids) as the
+    flat solver, under the distinct (w, eid) total order."""
+    g = GRAPHS[gname]
+    flat = msf(g)
+    cfg = CoarsenConfig(rounds_per_level=2, cutoff=16, dedupe=dedupe)
+    co = coarsen_msf(g, config=cfg)
+    assert _eids(co) == _eids(flat)
+    assert int(co.n_msf_edges) == int(flat.n_msf_edges)
+    assert abs(float(co.weight) - nx_free_msf_weight(g)) < 1e-3
+    assert _same_partition(co.parent, flat.parent)
+    # coarsen parent labels are canonical original-vertex representatives
+    roots = np.unique(np.asarray(co.parent))
+    assert len(roots) == nx_free_n_components(g)
+    assert all(np.asarray(co.parent)[r] == r for r in roots)
+
+
+def test_multiple_levels_run_and_shrink():
+    g = rmat_graph(10, 4, seed=13)
+    eng = CoarsenMSF(CoarsenConfig(rounds_per_level=1, cutoff=8, max_levels=8))
+    r = eng(g)
+    st = eng.last_stats
+    assert len(st.levels) >= 2
+    ns = [l.n for l in st.levels] + [st.residual_n]
+    assert all(a > b for a, b in zip(ns, ns[1:]))  # strict vertex shrink
+    assert _eids(r) == _eids(msf(g))
+
+
+@pytest.mark.parametrize(
+    "pack,segmin",
+    [(True, None), (True, "jnp"), (True, "pallas"), (False, None)],
+)
+def test_pack_and_segmin_backends(pack, segmin):
+    g = random_graph(200, 700, seed=17)
+    cfg = CoarsenConfig(cutoff=16, pack=pack, segmin=segmin, dedupe="device")
+    co = coarsen_msf(g, config=cfg)
+    assert _eids(co) == _eids(msf(g))
+
+
+def test_large_n_lexsort_key_path():
+    """n > 2^16 leaves the packed uint32 pair-key regime: the device
+    filter must take the lexsort branch (int64 keys need x64) and still
+    agree with the host twin and the flat solver."""
+    n = (1 << 16) + 512
+    rng = np.random.default_rng(37)
+    m = 3000
+    g = from_edges(
+        rng.integers(0, n, m), rng.integers(0, n, m),
+        rng.integers(1, 256, m).astype(np.float64), n,
+    )
+    flat = msf(g)
+    for dd in ("device", "host"):
+        co = coarsen_msf(g, config=CoarsenConfig(cutoff=1024, dedupe=dd))
+        assert _eids(co) == _eids(flat)
+
+
+def test_msf_coarsen_dispatcher():
+    g = random_graph(150, 500, seed=19)
+    r1 = msf(g, coarsen=True)
+    r2 = msf(g, coarsen=CoarsenConfig(cutoff=8))
+    assert _eids(r1) == _eids(r2) == _eids(msf(g))
+    with pytest.raises(ValueError):
+        msf(g, coarsen=True, parent0=jnp.zeros(g.n, jnp.int32))
+
+
+def test_empty_and_edgeless():
+    g = from_edges(
+        np.array([], np.int64), np.array([], np.int64),
+        np.array([], np.float64), 40,
+    )
+    r = coarsen_msf(g, config=CoarsenConfig(cutoff=4))
+    assert float(r.weight) == 0.0 and int(r.n_msf_edges) == 0
+    np.testing.assert_array_equal(np.asarray(r.parent), np.arange(40))
+
+
+def test_weight_below_cutoff_is_flat():
+    """n ≤ cutoff: zero levels, pure flat solve, identical result."""
+    g = random_graph(100, 300, seed=23)
+    eng = CoarsenMSF(CoarsenConfig(cutoff=1024))
+    r = eng(g)
+    assert len(eng.last_stats.levels) == 0
+    assert _eids(r) == _eids(msf(g))
+
+
+# ---------------------------------------------------------------------------
+# distributed pre-contraction hook
+# ---------------------------------------------------------------------------
+
+
+def test_precontract_partition_merge(host_mesh):
+    from repro.core.msf_dist import msf_distributed
+
+    g = random_graph(300, 1000, seed=29)
+    part, prelude = precontract_partition(
+        g, 1, 1, config=CoarsenConfig(rounds_per_level=2, cutoff=16)
+    )
+    assert part.n_pad >= prelude.stats.residual_n
+    assert len(prelude.stats.levels) >= 1  # contraction actually ran
+    drv = msf_distributed(part, host_mesh, shortcut="csp", capacity=512)
+    dist = drv(part.src_row, part.dst_col, part.w, part.eid, part.valid)
+    merged = merge_distributed(prelude, dist)
+    flat = msf(g)
+    assert _eids(merged) == _eids(flat)
+    assert abs(float(merged.weight) - nx_free_msf_weight(g)) < 1e-3
+    assert _same_partition(merged.parent, flat.parent)

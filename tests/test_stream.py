@@ -234,6 +234,92 @@ def test_insert_after_delete_is_consistent():
 
 
 # ---------------------------------------------------------------------------
+# adaptive batch capacity
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_capacity_grows_and_shrinks_pow2():
+    rng = np.random.default_rng(21)
+    n = 128
+    eng = StreamingMSF(
+        n, batch_capacity=256, adaptive_capacity=True, min_capacity=16
+    )
+    batches = []
+    caps = []
+    # small → big → sustained small again
+    sizes = [4, 6, 200, 5] + [3] * 9
+    for m in sizes:
+        u, v = rng.integers(0, n, m), rng.integers(0, n, m)
+        w = rng.integers(1, 256, m).astype(np.float64)
+        s = eng.insert_batch(u, v, w)
+        batches.append((u, v, w))
+        caps.append(s.batch_capacity)
+        # capacity is always a power of two within [min, max]
+        assert 16 <= s.batch_capacity <= 256
+        assert s.batch_capacity & (s.batch_capacity - 1) == 0
+        # union buffer tracks the adaptive capacity exactly
+        assert s.union_directed_edges == 2 * (n - 1 + s.batch_capacity)
+    assert caps[0] == 16  # starts at the floor
+    assert max(caps) == 256  # grew to fit the 200-edge batch
+    assert caps[-1] < max(caps)  # shrank back after sustained small batches
+    # recompile count is visible and bounded by the pow2 ladder walked
+    assert 2 <= eng.recompiles <= 8
+    # exactness is untouched by resizing
+    g = _accumulated(batches, n)
+    assert abs(eng.weight - nx_free_msf_weight(g)) < 1e-3
+    assert _same_partition(eng.snapshots.acquire().parent, msf(g).parent)
+
+
+def test_adaptive_capacity_still_enforces_max():
+    eng = StreamingMSF(64, batch_capacity=4, adaptive_capacity=True)
+    with pytest.raises(ValueError):
+        eng.insert_batch([0, 1, 2, 3, 4], [1, 2, 3, 4, 5], [1.0] * 5)
+
+
+def test_fixed_capacity_single_compile():
+    eng = StreamingMSF(64, batch_capacity=8)
+    s1 = eng.insert_batch([0], [1], [1.0])
+    s2 = eng.insert_batch([1, 2], [2, 3], [2.0, 3.0])
+    assert s1.recompiles == s2.recompiles == 1
+    assert s1.batch_capacity == s2.batch_capacity == 8
+
+
+# ---------------------------------------------------------------------------
+# pack32 / Pallas segment-min inner loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("segmin", ["jnp", "pallas"])
+def test_stream_pack_segmin_backends_match_oracle(segmin):
+    """The Pallas flat segment-min wired into _run_union's inner loop
+    (interpret=True on CPU) gives the same forest as the oracle."""
+    rng = np.random.default_rng(31)
+    n = 96
+    eng = StreamingMSF(n, batch_capacity=64, pack=True, segmin=segmin)
+    batches = _random_batches(rng, n, 4, 50)
+    for u, v, w in batches:
+        eng.insert_batch(u, v, w)
+    g = _accumulated(batches, n)
+    assert abs(eng.weight - nx_free_msf_weight(g)) < 1e-3
+    assert _same_partition(eng.snapshots.acquire().parent, msf(g).parent)
+
+
+def test_pack_auto_falls_back_on_fractional_weights():
+    eng = StreamingMSF(32, batch_capacity=8)
+    assert eng._use_pack()  # integral weights so far (none)
+    eng.insert_batch([0, 1], [1, 2], [0.5, 2.25])
+    assert not eng._use_pack()  # permanently unpackable
+    eng.insert_batch([2], [3], [1.0])
+    assert abs(eng.weight - 3.75) < 1e-6
+
+
+def test_pack_true_rejects_fractional_weights():
+    eng = StreamingMSF(32, batch_capacity=8, pack=True)
+    with pytest.raises(ValueError, match="integral"):
+        eng.insert_batch([0], [1], [0.5])
+
+
+# ---------------------------------------------------------------------------
 # snapshot protocol
 # ---------------------------------------------------------------------------
 
