@@ -5,17 +5,26 @@ Rows per graph family (rmat at increasing scale, grid road, components):
   with ``speedup_vs_flat`` and the level schedule in the derived field;
 - ``flat_*``    — ``core.msf`` over the same graph (what the seed did).
 
+``--fused`` adds ``fused_*`` rows: the one-jit device-resident level
+pipeline (``CoarsenConfig(fused=True)``) against the PR-2 host-round-trip
+level path over the same graphs, with ``speedup_vs_host_levels`` as the
+headline derived metric.
+
 ``--smoke`` runs one tiny rmat and *asserts* flat/coarsen parity (weight
 and edge set) — the CI kernel-regression tripwire: a broken contraction
-or dedupe kernel fails the step, not just a slower benchmark.
+or dedupe kernel fails the step, not just a slower benchmark. With
+``--fused`` the fused pipeline parity is asserted too.
+
+``--json PATH`` writes the rows as a BENCH trajectory point (CI artifact).
 """
 from __future__ import annotations
 
+import dataclasses
 import sys
 
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit, row, timeit
 from repro.coarsen import CoarsenConfig, CoarsenMSF
 from repro.core.msf import msf
 from repro.graphs import grid_road_graph, rmat_graph
@@ -30,14 +39,17 @@ def _eid_set(r):
     return set(np.asarray(r.msf_eids)[: int(r.n_msf_edges)].tolist())
 
 
+def _assert_parity(flat_r, other_r, what: str):
+    assert abs(float(flat_r.weight) - float(other_r.weight)) <= max(
+        1.0, 1e-6 * float(flat_r.weight)
+    ), (what, float(flat_r.weight), float(other_r.weight))
+    assert _eid_set(flat_r) == _eid_set(other_r), f"{what} MSF edge set drifted"
+
+
 def _bench_graph(name: str, g, cfg: CoarsenConfig, check: bool = False):
     eng = CoarsenMSF(cfg)
     if check:
-        flat_r, co_r = msf(g), eng(g)
-        assert abs(float(flat_r.weight) - float(co_r.weight)) <= max(
-            1.0, 1e-6 * float(flat_r.weight)
-        ), (float(flat_r.weight), float(co_r.weight))
-        assert _eid_set(flat_r) == _eid_set(co_r), "coarsen MSF edge set drifted"
+        _assert_parity(msf(g), eng(g), f"coarsen_{name}")
     t_flat = timeit(lambda: msf(g), iters=3)
     t_co = timeit(lambda: eng(g), iters=3)
     st = eng.last_stats
@@ -54,20 +66,99 @@ def _bench_graph(name: str, g, cfg: CoarsenConfig, check: bool = False):
     ]
 
 
-def run_rows(smoke: bool = False):
+def _pr2_run_levels(g, cfg: CoarsenConfig):
+    """The PR-2 level loop, reconstructed faithfully from its pieces: the
+    directed 2E concatenation into ``contract_level`` and the numpy
+    lexsort filter, with every level round-tripping arrays through the
+    host. This is the *historical* baseline the fused path replaces —
+    the current unfused engine already shares this PR's symmetric
+    contraction, so it is benched separately (``host_levels_*``)."""
+    from repro.coarsen.contract import contract_level
+    from repro.coarsen.engine import _IMAX, _canonical_host, _next_pow2
+    from repro.coarsen.filter import filter_level_host
+    from repro.stream.service import next_pow2
+
+    lo, hi, w, eid, valid, m_cur = _canonical_host(g)
+    n_cur, levels = g.n, 0
+    while levels < cfg.max_levels and n_cur > cfg.cutoff and m_cur > 0:
+        n_pad = next_pow2(n_cur, floor=8)
+        res = contract_level(
+            np.concatenate([lo, hi]), np.concatenate([hi, lo]),
+            np.concatenate([w, w]), np.concatenate([eid, eid]),
+            np.concatenate([valid, valid]),
+            n=n_pad, rounds=cfg.rounds_per_level, pack=True,
+        )
+        n_next = int(res.n_next) - (n_pad - n_cur)
+        if n_next == n_cur:
+            break
+        l2, h2, w2, e2 = filter_level_host(
+            lo, hi, w, eid, valid, np.asarray(res.new_ids), n_cur
+        )
+        m_next = len(l2)
+        pad = _next_pow2(m_next)
+        lo = np.zeros(pad, np.int32)
+        hi = np.zeros(pad, np.int32)
+        w = np.full(pad, np.inf, np.float32)
+        eid = np.full(pad, _IMAX, np.int32)
+        lo[:m_next], hi[:m_next] = l2, h2
+        w[:m_next], eid[:m_next] = w2, e2
+        valid = np.arange(pad) < m_next
+        n_cur, m_cur = n_next, m_next
+        levels += 1
+    return n_cur, m_cur
+
+
+def _bench_fused(name: str, g, cfg: CoarsenConfig, check: bool = False):
+    """Fused one-jit levels vs the PR-2 host-round-trip level path and the
+    current unfused host path (levels only — the residual solve is
+    identical across all three)."""
+    from repro.coarsen.engine import run_levels
+
+    cfg_fused = dataclasses.replace(cfg, fused=True, dedupe="auto")
+    cfg_host = dataclasses.replace(cfg, fused=False, dedupe="host")
+    if check:
+        _assert_parity(msf(g), CoarsenMSF(cfg_fused)(g), f"fused_{name}")
+    t_pr2 = timeit(lambda: _pr2_run_levels(g, cfg), iters=3)
+    t_host = timeit(lambda: run_levels(g, cfg_host), iters=3)
+    t_fused = timeit(lambda: run_levels(g, cfg_fused), iters=3)
+    pre = run_levels(g, cfg_fused)
+    st = pre.stats
+    return [
+        row(
+            f"fused_levels_{name}",
+            t_fused * 1e6,
+            f"speedup_vs_pr2={t_pr2 / t_fused:.2f}x;"
+            f"speedup_vs_host={t_host / t_fused:.2f}x;"
+            f"levels={len(st.levels)};residual_n={st.residual_n};"
+            f"residual_m={st.residual_m}",
+        ),
+        row(f"pr2_levels_{name}", t_pr2 * 1e6, f"edges={g.num_directed_edges}"),
+        row(f"host_levels_{name}", t_host * 1e6, f"edges={g.num_directed_edges}"),
+    ]
+
+
+def run_rows(smoke: bool = False, fused: bool = False):
     if smoke:
         g = rmat_graph(SMOKE_SCALE, 4, seed=9)
         cfg = CoarsenConfig(rounds_per_level=2, cutoff=32)
-        return _bench_graph(f"rmat_s{SMOKE_SCALE}_e4_smoke", g, cfg, check=True)
+        out = _bench_graph(f"rmat_s{SMOKE_SCALE}_e4_smoke", g, cfg, check=True)
+        if fused:
+            out += _bench_fused(
+                f"rmat_s{SMOKE_SCALE}_e4_smoke", g, cfg, check=True
+            )
+        return out
     out = []
     for scale in RMAT_SCALES:
         g = rmat_graph(scale, EDGE_FACTOR, seed=9)
         cfg = CoarsenConfig(rounds_per_level=2, cutoff=max(128, g.n >> 4))
         out += _bench_graph(f"rmat_s{scale}_e{EDGE_FACTOR}", g, cfg)
+        if fused:
+            out += _bench_fused(f"rmat_s{scale}_e{EDGE_FACTOR}", g, cfg)
     g = grid_road_graph(128, 128, seed=2)
-    out += _bench_graph(
-        "grid_128x128", g, CoarsenConfig(rounds_per_level=2, cutoff=1024)
-    )
+    cfg = CoarsenConfig(rounds_per_level=2, cutoff=1024)
+    out += _bench_graph("grid_128x128", g, cfg)
+    if fused:
+        out += _bench_fused("grid_128x128", g, cfg)
     g = components_graph(64, 256, seed=5)
     out += _bench_graph(
         "components_64x256", g, CoarsenConfig(rounds_per_level=2, cutoff=1024)
@@ -76,7 +167,10 @@ def run_rows(smoke: bool = False):
 
 
 if __name__ == "__main__":
-    smoke = "--smoke" in sys.argv[1:]
-    print("\n".join(run_rows(smoke=smoke)))
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    fused = "--fused" in argv
+    emit(run_rows(smoke=smoke, fused=fused), argv)
     if smoke:
-        print("# coarsen smoke: flat/coarsen parity OK", file=sys.stderr)
+        tag = " (+fused)" if fused else ""
+        print(f"# coarsen smoke: flat/coarsen parity OK{tag}", file=sys.stderr)

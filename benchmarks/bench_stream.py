@@ -6,14 +6,20 @@ Rows:
 - ``stream_recompute_*`` — full ``msf()`` over the accumulated edge set at
   the same point in the stream (what the seed had to do per update);
 - ``stream_queries_*``   — fused snapshot-gather query throughput.
+
+``--smoke`` streams a tiny graph and *asserts* the engine's forest weight
+matches a full recompute (for both the flat and the coarsen-recompute
+union paths) — the CI tripwire for the sparsification/union machinery.
+``--json PATH`` writes the rows as a BENCH trajectory point.
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit, row, timeit
 from repro.core.msf import msf
 from repro.graphs.generators import rmat_graph
 from repro.graphs.structures import from_edges
@@ -24,6 +30,56 @@ SCALE = 14
 EDGE_FACTOR = 8
 BATCH = 2048
 QUERY_BATCH = 1 << 14
+
+
+SMOKE_SCALE = 10
+SMOKE_BATCH = 256
+
+
+def run_smoke_rows():
+    """Tiny stream with parity asserts; one row per engine flavour."""
+    from repro.coarsen import CoarsenConfig
+
+    n = 1 << SMOKE_SCALE
+    g_full = rmat_graph(SMOKE_SCALE, 4, seed=9)
+    lo, hi, w = undirected_edges(g_full)
+    engines = {
+        "flat": StreamingMSF(n, batch_capacity=SMOKE_BATCH),
+        # cutoff far below n so the rebuild runs real contraction levels
+        "coarsen": StreamingMSF(
+            n, batch_capacity=SMOKE_BATCH,
+            coarsen=CoarsenConfig(cutoff=128), coarsen_threshold=512,
+        ),
+    }
+    out = []
+    n_batches = len(lo) // SMOKE_BATCH
+    for name, eng in engines.items():
+        t0 = time.perf_counter()
+        for k in range(n_batches):
+            sl = slice(k * SMOKE_BATCH, (k + 1) * SMOKE_BATCH)
+            eng.insert_batch(lo[sl], hi[sl], w[sl])
+        dt = time.perf_counter() - t0
+        m_seen = n_batches * SMOKE_BATCH
+        g_acc = from_edges(
+            lo[:m_seen], hi[:m_seen], w[:m_seen].astype(np.float64), n
+        )
+        want = float(msf(g_acc).weight)
+        assert abs(eng.weight - want) <= max(1.0, 1e-6 * want), (
+            name, eng.weight, want,
+        )
+        if name == "coarsen":
+            st = eng.last_coarsen_stats
+            assert st is not None and len(st.levels) >= 1, (
+                "coarsen smoke degenerated to the flat recompute"
+            )
+        out.append(
+            row(
+                f"stream_smoke_{name}_s{SMOKE_SCALE}_b{SMOKE_BATCH}",
+                dt / n_batches * 1e6,
+                f"batches={n_batches};weight={eng.weight:.0f}",
+            )
+        )
+    return out
 
 
 def run_rows():
@@ -83,4 +139,8 @@ def run_rows():
 
 
 if __name__ == "__main__":
-    print("\n".join(run_rows()))
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    emit(run_smoke_rows() if smoke else run_rows(), argv)
+    if smoke:
+        print("# stream smoke: engine/recompute weight parity OK", file=sys.stderr)

@@ -2,6 +2,7 @@
 the dry-run roofline, EXPERIMENTS.md §Roofline)."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -22,3 +23,37 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def write_json(path: str, rows: list[str]) -> None:
+    """Persist CSV rows as a BENCH_*.json trajectory point (CI artifact).
+
+    One file per bench run: environment fingerprint + the parsed rows, so
+    successive CI artifacts line up into a per-benchmark time series
+    without re-parsing stdout logs.
+    """
+    parsed = []
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        parsed.append(
+            {"name": name, "us_per_call": float(us), "derived": derived}
+        )
+    doc = {
+        "schema": "bench-rows/v1",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "rows": parsed,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+
+
+def emit(rows: list[str], argv: list[str]) -> None:
+    """Print rows; honor a ``--json PATH`` CLI flag when present."""
+    print("\n".join(rows))
+    if "--json" in argv:
+        at = argv.index("--json")
+        if at + 1 >= len(argv) or argv[at + 1].startswith("--"):
+            raise SystemExit("--json requires a PATH argument")
+        write_json(argv[at + 1], rows)

@@ -1,16 +1,27 @@
 # Borůvka contraction + edge-filter coarsening engine (DESIGN.md §7):
 # contract-and-filter levels feeding the AS multilinear MSF solver.
-from repro.coarsen.contract import ContractResult, contract_level
+from repro.coarsen.contract import (
+    ContractResult,
+    contract_level,
+    contract_level_und,
+)
 from repro.coarsen.engine import (
     CoarsenConfig,
     CoarsenMSF,
     CoarsenPrelude,
     CoarsenStats,
+    FusedLevel,
     LevelStats,
     coarsen_msf,
+    fused_level,
     merge_distributed,
     precontract_partition,
     run_levels,
 )
-from repro.coarsen.filter import FilterResult, filter_level
+from repro.coarsen.filter import (
+    FilterResult,
+    filter_level,
+    filter_level_callback,
+    filter_level_host,
+)
 from repro.coarsen.relabel import compose_labels, rank_relabel, relabel_edges

@@ -36,6 +36,30 @@ class ContractResult(NamedTuple):
     n_msf_edges: jax.Array  # int32 scalar
 
 
+def _contract_rounds(reduce_fn, n: int, rounds: int) -> ContractResult:
+    """Shared K-round hook+shortcut driver; ``reduce_fn(p)`` yields the
+    per-root MINWEIGHT EdgeMin for the current parent vector."""
+    p = jnp.arange(n, dtype=jnp.int32)
+    total = jnp.float32(0.0)
+    msf_eids = jnp.full((n,), IMAX, jnp.int32)
+    n_f = jnp.int32(0)
+    for _ in range(rounds):
+        r = reduce_fn(p)
+        p_h, keep, _ = hook_and_tiebreak(p, r.w, r.eid, r.payload[0])
+        total = total + jnp.sum(jnp.where(keep, r.w, 0.0))
+        msf_eids, n_f = record_edges(msf_eids, n_f, keep, r.eid)
+        p = sc.complete_shortcut(p_h)
+    new_ids, n_next = rank_relabel(p)
+    return ContractResult(
+        parent=p,
+        new_ids=new_ids,
+        n_next=n_next,
+        weight=total,
+        msf_eids=msf_eids,
+        n_msf_edges=n_f,
+    )
+
+
 @partial(jax.jit, static_argnames=("n", "rounds", "pack", "segmin"))
 def contract_level(
     src: jax.Array,
@@ -55,25 +79,112 @@ def contract_level(
     the loop unrolls — each round is exactly the complete-variant MSF body
     and preserves the every-tree-a-star invariant at its top.
     """
-    p = jnp.arange(n, dtype=jnp.int32)
-    total = jnp.float32(0.0)
-    msf_eids = jnp.full((n,), IMAX, jnp.int32)
-    n_f = jnp.int32(0)
-    for _ in range(rounds):
-        if pack:
-            r = min_outgoing_coo_packed(p, src, dst, w, eid, valid, n, segmin=segmin)
-        else:
-            r = min_outgoing_coo(p, src, dst, w, eid, valid, n, segment="root")
-        p_h, keep, _ = hook_and_tiebreak(p, r.w, r.eid, r.payload[0])
-        total = total + jnp.sum(jnp.where(keep, r.w, 0.0))
-        msf_eids, n_f = record_edges(msf_eids, n_f, keep, r.eid)
-        p = sc.complete_shortcut(p_h)
-    new_ids, n_next = rank_relabel(p)
-    return ContractResult(
-        parent=p,
-        new_ids=new_ids,
-        n_next=n_next,
-        weight=total,
-        msf_eids=msf_eids,
-        n_msf_edges=n_f,
-    )
+    if pack:
+        def reduce_fn(p):
+            return min_outgoing_coo_packed(
+                p, src, dst, w, eid, valid, n, segmin=segmin
+            )
+    else:
+        def reduce_fn(p):
+            return min_outgoing_coo(p, src, dst, w, eid, valid, n, segment="root")
+    return _contract_rounds(reduce_fn, n, rounds)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n", "eid_capacity", "rounds", "pack", "segmin"),
+)
+def contract_level_und(
+    lo: jax.Array,
+    hi: jax.Array,
+    w: jax.Array,
+    eid: jax.Array,
+    valid: jax.Array,
+    *,
+    n: int,
+    eid_capacity: int,
+    rounds: int = 2,
+    pack: bool = False,
+    segmin=None,
+) -> ContractResult:
+    """:func:`contract_level` over the *undirected* canonical arrays.
+
+    Two structural savings over feeding the symmetric 2E concatenation:
+
+    - the ``outgoing`` mask is symmetric (p[lo] ≠ p[hi]), so ONE masked
+      MINWEIGHT key array serves both directions; the per-root partials
+      are two segment-mins (segments p[lo], then p[hi]) ⊕-combined
+      elementwise — no 2E intermediates ever materialize;
+    - the hook payload (the winner's other-endpoint parent) is recovered
+      by *gathering the winning edge back through an eid→position table*
+      (one [eid_capacity] scatter per level, reused across rounds)
+      instead of a second masked segment reduction per direction.
+
+    Identical results to :func:`contract_level` on the concatenated form:
+    the monoid is commutative and the (w, eid) order total, so the
+    per-root minimum is direction-agnostic, and the payload is a pure
+    function of the winning edge. ``eid_capacity`` is a static bound with
+    eid < eid_capacity for every valid edge (the engine passes the padded
+    original edge capacity).
+    """
+    from repro.core.semiring import EdgeMin, INF, PACK_IDENTITY, pack32, unpack32
+
+    e = lo.shape[0]
+    pos_of_eid = jnp.zeros(eid_capacity, jnp.int32).at[
+        jnp.where(valid, eid, eid_capacity)
+    ].set(jnp.arange(e, dtype=jnp.int32), mode="drop")
+    i_n = jnp.arange(n, dtype=jnp.int32)
+
+    def payload_from_eid(p, mineid, empty):
+        pos = pos_of_eid[jnp.clip(mineid, 0, eid_capacity - 1)]
+        plo, phi = p[lo[pos]], p[hi[pos]]
+        pd = jnp.where(plo == i_n, phi, plo)
+        return jnp.where(empty, IMAX, pd)
+
+    if pack:
+        def reduce_fn(p):
+            plo, phi = p[lo], p[hi]
+            out = (plo != phi) & valid
+            # Mask weights BEFORE the uint32 cast (padding carries +inf).
+            w_int = jnp.where(out, w, 0.0).astype(jnp.uint32)
+            key = jnp.where(out, pack32(w_int, eid), PACK_IDENTITY)
+            if segmin is None:
+                m1 = jax.ops.segment_min(key, plo, num_segments=n)
+                m2 = jax.ops.segment_min(key, phi, num_segments=n)
+            else:
+                m1 = segmin(key, plo, n)
+                m2 = segmin(key, phi, n)
+            minkey = jnp.minimum(m1, m2)
+            w_out, eid_out = unpack32(minkey)
+            empty = minkey == PACK_IDENTITY
+            return EdgeMin(
+                w=jnp.where(empty, INF, w_out.astype(jnp.float32)),
+                eid=jnp.where(empty, IMAX, eid_out),
+                payload=(payload_from_eid(p, eid_out, empty),),
+            )
+    else:
+        def reduce_fn(p):
+            plo, phi = p[lo], p[hi]
+            out = (plo != phi) & valid
+            wm = jnp.where(out, w, INF)
+            minw = jnp.minimum(
+                jax.ops.segment_min(wm, plo, num_segments=n),
+                jax.ops.segment_min(wm, phi, num_segments=n),
+            )
+            on1 = out & (wm == minw[plo])
+            on2 = out & (wm == minw[phi])
+            mineid = jnp.minimum(
+                jax.ops.segment_min(
+                    jnp.where(on1, eid, IMAX), plo, num_segments=n
+                ),
+                jax.ops.segment_min(
+                    jnp.where(on2, eid, IMAX), phi, num_segments=n
+                ),
+            )
+            empty = minw == INF
+            return EdgeMin(
+                w=minw,
+                eid=mineid,
+                payload=(payload_from_eid(p, mineid, empty),),
+            )
+    return _contract_rounds(reduce_fn, n, rounds)

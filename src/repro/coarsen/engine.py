@@ -24,13 +24,19 @@ Invariants (DESIGN.md §7.4):
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import NamedTuple, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.coarsen.contract import contract_level
-from repro.coarsen.filter import filter_level, filter_level_host
+from repro.coarsen.contract import contract_level, contract_level_und
+from repro.coarsen.filter import (
+    filter_level,
+    filter_level_callback,
+    filter_level_host,
+)
 from repro.core.msf import MSFResult, msf as _flat_msf
 from repro.core.semiring import PACK_IDX_MASK
 from repro.graphs.partition import Partition2D, partition_edges_2d
@@ -49,12 +55,23 @@ class CoarsenConfig:
     cutoff: int = 2048  # hand off to core.msf when n ≤ cutoff
     max_levels: int = 16
     pack: bool | None = None  # pack32 level kernels; None = auto-detect
-    segmin: str | None = None  # packed segment-min backend ("jnp"/"pallas"/"auto")
+    # Packed segment-min backend ("jnp"/"pallas"/"sorted"/"auto"). The
+    # hook reduction's segment ids are unsorted, so "sorted" there means
+    # "auto"; the *dedupe* step's ids are sorted, so "pallas"/"sorted"
+    # both select the contiguous-range sorted kernel for it.
+    segmin: str | None = None
     # Edge-dedupe backend: the jitted sort + pack32 segment-min pipeline
     # ("device", the TPU path) or the numpy lexsort twin ("host" — the
-    # engine is host-driven between levels, and numpy's sort beats XLA's
-    # CPU sort by ~10x). "auto" picks by jax.default_backend().
+    # CPU backend, where numpy's sort beats XLA's CPU sort ~5-10x).
+    # "auto" picks by jax.default_backend(). Under ``fused=True`` the
+    # whole level lives in one jit, and "host" means the dedupe stage
+    # hops through a ``pure_callback`` (zero-copy on CPU — device and
+    # host share memory there) while everything else stays compiled.
     dedupe: str = "auto"
+    # Run each level as one jitted call (contract → relabel → sort-dedupe
+    # → device compaction) with static edge-capacity padding, instead of
+    # the separate contract jit + host/device filter per level.
+    fused: bool = False
 
     def __post_init__(self):
         if self.rounds_per_level < 1:
@@ -93,6 +110,14 @@ def _next_pow2(k: int) -> int:
     return next_pow2(k, floor=8)  # edge buffers tolerate a smaller floor
 
 
+def _eid_capacity(eid: np.ndarray, m0: int) -> int:
+    """Static pow2 bound on the global eids carried by the levels — sizes
+    the eid→position hook-payload table of ``contract_level_und``."""
+    if m0 == 0:
+        return 8
+    return _next_pow2(int(np.asarray(eid[:m0]).max()) + 1)
+
+
 def _auto_pack(w: np.ndarray, eid: np.ndarray, valid: np.ndarray, e_dir: int) -> bool:
     """pack32 applies when weights are integral in [0, 255] and both the
     global eids and the per-level position indices fit 24 bits strictly."""
@@ -127,6 +152,192 @@ def _canonical_host(graph: Graph):
     return lo, hi, ww, ee, vv, m0
 
 
+def _resolve_segmins(cfg: CoarsenConfig, use_pack: bool):
+    """(hook segmin, dedupe segmin) callables for the level kernels.
+
+    The hook reduction (``contract_level``) sees *unsorted* segment ids
+    (roots of the current parent vector), so "sorted" degrades to "auto"
+    there. The dedupe's ids are the boundary prefix-sum over sorted pair
+    keys, so a Pallas request ("pallas"/"sorted") selects the
+    contiguous-range sorted kernel — the flat kernel's full rescan is
+    O(E²/block_rows) at num_segments = E and was never viable here.
+    """
+    if not use_pack:
+        return None, None
+    from repro.kernels.ops import flat_segmin_backend, make_packed_segmin
+
+    hook = None
+    if cfg.segmin not in (None, "jnp"):
+        hook = make_packed_segmin(flat_segmin_backend(cfg.segmin))
+    if cfg.segmin in ("pallas", "sorted"):
+        dedupe = make_packed_segmin("sorted")
+    elif cfg.segmin == "jnp":
+        dedupe = None
+    else:  # None / "auto": sorted Pallas on TPU, XLA segment_min elsewhere
+        dedupe = (
+            make_packed_segmin("sorted")
+            if jax.default_backend() == "tpu"
+            else None
+        )
+    return hook, dedupe
+
+
+class FusedLevel(NamedTuple):
+    """One coarsening level's outputs, all device-resident, edge arrays at
+    the (static) input capacity with live entries front-packed."""
+
+    lo: jax.Array  # int32 [E] — supervertex pairs, lo < hi
+    hi: jax.Array  # int32 [E]
+    w: jax.Array  # float32 [E]; +inf beyond m_new
+    eid: jax.Array  # int32 [E] — original global eids; IMAX beyond m_new
+    valid: jax.Array  # bool [E]
+    m_new: jax.Array  # int32 scalar: unique live pairs
+    new_ids: jax.Array  # int32 [n]: vertex → supervertex rank
+    n_next: jax.Array  # int32 scalar: supervertex count (incl. padding roots)
+    weight: jax.Array  # float32 scalar: weight hooked this level
+    msf_eids: jax.Array  # int32 [n]: global eids hooked (front-packed)
+    n_msf_edges: jax.Array  # int32 scalar
+    label_map: jax.Array  # int32 [n0]: original vertex → supervertex id
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "n", "eid_capacity", "rounds", "pack", "segmin", "segmin_dedupe",
+        "dedupe_host",
+    ),
+)
+def fused_level(
+    lo: jax.Array,
+    hi: jax.Array,
+    w: jax.Array,
+    eid: jax.Array,
+    valid: jax.Array,
+    label_map: jax.Array,
+    *,
+    n: int,
+    eid_capacity: int,
+    rounds: int = 2,
+    pack: bool = False,
+    segmin=None,
+    segmin_dedupe=None,
+    dedupe_host: bool = False,
+) -> FusedLevel:
+    """One whole coarsening level under a single jit (DESIGN.md §7.6).
+
+    contract (K hook+shortcut rounds) → rank_relabel → sort → sorted-
+    segment dedupe → compaction, with zero host round-trips inside the
+    level. Compaction is device-side and comes out of the dedupe's
+    prefix-sum: segment ids are ranks of the sorted pair keys (a cumsum
+    over boundary flags), invalid entries sort last, so scattering each
+    segment's winner to its rank front-packs the live edges — the
+    engine's between-level re-pad is then a device slice, not a host
+    gather. Dead tail slots are sanitized to the sort sentinels
+    (w = +inf, eid = IMAX) so the next level's dedupe ordering stays
+    exact under the (w, eid) total order.
+
+    Inputs are the *undirected* canonical arrays at a static pow2
+    capacity; ``label_map`` is the [n0] original-vertex composition,
+    threaded through so it too stays device-resident. One executable per
+    (n, edge-capacity, n0) shape triple.
+
+    ``dedupe_host=True`` swaps the dedupe stage for the zero-copy host
+    callback (:func:`filter_level_callback`) — the CPU backend of
+    ``dedupe="auto"``, where XLA's sort loses ~5× to numpy's; on TPU the
+    engine keeps the device pipeline (sort + sorted-segment Pallas
+    kernel) so the level never leaves the accelerator.
+    """
+    res = contract_level_und(
+        lo, hi, w, eid, valid,
+        n=n, eid_capacity=eid_capacity, rounds=rounds, pack=pack, segmin=segmin,
+    )
+    if dedupe_host:
+        fr = filter_level_callback(
+            lo, hi, w, eid, valid, res.new_ids, n=n
+        )
+    else:
+        fr = filter_level(
+            lo, hi, w, eid, valid, res.new_ids, n=n, pack=pack,
+            segmin=segmin_dedupe,
+        )
+    return FusedLevel(
+        lo=fr.lo,  # filter sanitizes dead slots to the sort identities
+        hi=fr.hi,
+        w=fr.w,
+        eid=fr.eid,
+        valid=fr.valid,
+        m_new=fr.m_new,
+        new_ids=res.new_ids,
+        n_next=res.n_next,
+        weight=res.weight,
+        msf_eids=res.msf_eids,
+        n_msf_edges=res.n_msf_edges,
+        label_map=res.new_ids[label_map],
+    )
+
+
+def _run_levels_fused(
+    graph: Graph, cfg: CoarsenConfig, use_pack: bool, canon
+) -> CoarsenPrelude:
+    """Level loop over :func:`fused_level`: edge arrays and ``label_map``
+    stay on device across levels; only per-level scalars (n_next, m_new)
+    and the hooked eids cross to the host for loop control/bookkeeping."""
+    segmin_hook, segmin_dedupe = _resolve_segmins(cfg, use_pack)
+    dedupe = cfg.dedupe
+    if dedupe == "auto":
+        dedupe = "device" if jax.default_backend() == "tpu" else "host"
+    n0 = graph.n
+    lo_h, hi_h, w_h, eid_h, valid_h, m_cur = canon
+    eid_cap = _eid_capacity(eid_h, m_cur)
+    lo, hi = jnp.asarray(lo_h), jnp.asarray(hi_h)
+    w, eid, valid = jnp.asarray(w_h), jnp.asarray(eid_h), jnp.asarray(valid_h)
+    label_map = jnp.arange(n0, dtype=jnp.int32)
+
+    weight = 0.0
+    eids_acc: list[np.ndarray] = []
+    stats: list[LevelStats] = []
+    n_cur = n0
+
+    while len(stats) < cfg.max_levels and n_cur > cfg.cutoff and m_cur > 0:
+        n_pad = next_pow2(n_cur, floor=8)
+        res = fused_level(
+            lo, hi, w, eid, valid, label_map,
+            n=n_pad, eid_capacity=eid_cap, rounds=cfg.rounds_per_level,
+            pack=use_pack, segmin=segmin_hook, segmin_dedupe=segmin_dedupe,
+            dedupe_host=dedupe == "host",
+        )
+        n_next = int(res.n_next) - (n_pad - n_cur)  # drop padding roots
+        if n_next == n_cur:  # every component already complete
+            break
+        n_f = int(res.n_msf_edges)
+        eids_acc.append(np.asarray(res.msf_eids[:n_f]))
+        weight += float(res.weight)
+        m_next = int(res.m_new)
+        pad = _next_pow2(m_next)
+        lo, hi, w, eid, valid = (
+            res.lo[:pad], res.hi[:pad], res.w[:pad], res.eid[:pad],
+            res.valid[:pad],
+        )
+        label_map = res.label_map
+        stats.append(LevelStats(n=n_cur, m=m_cur, n_next=n_next,
+                                m_next=m_next, hooked=n_f))
+        n_cur, m_cur = n_next, m_next
+
+    residual = graph_from_canonical(
+        lo, hi, w, eid, valid, next_pow2(n_cur, floor=8)
+    )
+    return CoarsenPrelude(
+        weight=weight,
+        msf_eids=(
+            np.concatenate(eids_acc) if eids_acc else np.zeros(0, np.int32)
+        ),
+        label_map=np.asarray(label_map),
+        residual=residual,
+        stats=CoarsenStats(levels=tuple(stats), residual_n=n_cur,
+                           residual_m=m_cur),
+    )
+
+
 def run_levels(graph: Graph, config: CoarsenConfig | None = None) -> CoarsenPrelude:
     """Contract-and-filter until the cutoff; return the residual + prelude."""
     cfg = config or CoarsenConfig()
@@ -138,14 +349,15 @@ def run_levels(graph: Graph, config: CoarsenConfig | None = None) -> CoarsenPrel
         if cfg.pack is None
         else cfg.pack
     )
-    segmin_fn = None
-    if use_pack and cfg.segmin not in (None, "jnp"):
-        from repro.kernels.ops import make_packed_segmin
-
-        segmin_fn = make_packed_segmin(cfg.segmin)
+    if cfg.fused:
+        return _run_levels_fused(
+            graph, cfg, use_pack, (lo, hi, w, eid, valid, m_cur)
+        )
+    segmin_fn, segmin_dedupe_fn = _resolve_segmins(cfg, use_pack)
     dedupe = cfg.dedupe
     if dedupe == "auto":
         dedupe = "device" if jax.default_backend() == "tpu" else "host"
+    eid_cap = _eid_capacity(eid, m_cur)
 
     label_map = np.arange(n0, dtype=np.int32)
     weight = 0.0
@@ -162,14 +374,9 @@ def run_levels(graph: Graph, config: CoarsenConfig | None = None) -> CoarsenPrel
         # prefix-sum only counts roots at smaller ids), so real
         # supervertex ids remain contiguous in [0, R).
         n_pad = next_pow2(n_cur, floor=8)
-        src = np.concatenate([lo, hi])
-        dst = np.concatenate([hi, lo])
-        w2 = np.concatenate([w, w])
-        eid2 = np.concatenate([eid, eid])
-        valid2 = np.concatenate([valid, valid])
-        res = contract_level(
-            src, dst, w2, eid2, valid2,
-            n=n_pad, rounds=cfg.rounds_per_level,
+        res = contract_level_und(
+            lo, hi, w, eid, valid,
+            n=n_pad, eid_capacity=eid_cap, rounds=cfg.rounds_per_level,
             pack=use_pack, segmin=segmin_fn,
         )
         n_next = int(res.n_next) - (n_pad - n_cur)  # drop padding roots
@@ -193,7 +400,7 @@ def run_levels(graph: Graph, config: CoarsenConfig | None = None) -> CoarsenPrel
         else:
             fr = filter_level(
                 lo, hi, w, eid, valid, res.new_ids,
-                n=n_pad, pack=use_pack, segmin=segmin_fn,
+                n=n_pad, pack=use_pack, segmin=segmin_dedupe_fn,
             )
             m_next = int(fr.m_new)
             pad = _next_pow2(m_next)
@@ -273,6 +480,13 @@ class CoarsenMSF:
         # the levels (via config) but only forward alongside pack=True.
         if not msf_kw.get("pack"):
             msf_kw.pop("segmin", None)
+        else:
+            # The residual solver's hook reduction has unsorted segment
+            # ids; "sorted" is a dedupe-only backend. Let the levels keep
+            # it (via config) and give the residual the flat resolution.
+            from repro.kernels.ops import flat_segmin_backend
+
+            msf_kw["segmin"] = flat_segmin_backend(msf_kw.get("segmin"))
         self.msf_kw = msf_kw
         self.last_stats: CoarsenStats | None = None
 
@@ -296,16 +510,20 @@ def coarsen_msf(
     *,
     config: CoarsenConfig | None = None,
     segmin: str | None = None,
+    fused: bool | None = None,
     **msf_kw,
 ) -> MSFResult:
     """One-shot form of :class:`CoarsenMSF`; ``segmin`` (when given)
     applies to the level kernels — overriding ``config.segmin`` — and,
-    with ``pack=True``, the residual. Callers that need the per-level
+    with ``pack=True``, the residual; ``fused`` (when given) overrides
+    ``config.fused``. Callers that need the per-level
     :class:`CoarsenStats` should hold a :class:`CoarsenMSF` instance
     (its ``last_stats`` is per-instance, not shared global state)."""
     cfg = config or CoarsenConfig()
     if segmin is not None:
         cfg = dataclasses.replace(cfg, segmin=segmin)
+    if fused is not None:
+        cfg = dataclasses.replace(cfg, fused=fused)
     return CoarsenMSF(cfg, segmin=segmin, **msf_kw)(graph)
 
 

@@ -17,13 +17,13 @@ All-device, single jitted call with static shapes:
    prefix-sum (≤ E segments, independent of n′² — invalid entries sort
    last into one dead segment, so live segments are already
    front-compacted);
-3. per-segment MINWEIGHT via the pack32 segment-min (Pallas flat kernel
-   or ``jax.ops.segment_min``) in the integer-weight regime, the 3-pass
-   masked float reduction (``semiring.segment_argmin``) otherwise.
-   Caveat: this reduction has ``num_segments = E``, so the flat Pallas
-   kernel's compare-broadcast sweep costs O(E²/block_rows) lanes here —
-   acceptable only for modest levels; the segment ids are *sorted*, and
-   a contiguous-range kernel exploiting that is a ROADMAP follow-up
+3. per-segment MINWEIGHT via the pack32 segment-min in the
+   integer-weight regime, the 3-pass masked float reduction
+   (``semiring.segment_argmin``) otherwise. The segment ids here are
+   *sorted* (a prefix-sum over sort-order boundary flags), so the
+   matching Pallas backend is ``kernels.segment_min_sorted`` — O(E)
+   lanes via scalar-prefetched per-row-block offsets, vs the flat
+   kernel's O(E²/block_rows) rescan at ``num_segments = E``
    (``segmin=None``/"jnp" keeps this step at O(E) via segment_min);
 4. gather the winners' (lo, hi, w, global eid).
 
@@ -38,7 +38,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.semiring import INF, PACK_IDENTITY, pack32, unpack32, segment_argmin
+from repro.core.semiring import (
+    IMAX,
+    INF,
+    PACK_IDENTITY,
+    pack32,
+    segment_argmin,
+    unpack32,
+)
 from repro.coarsen.relabel import relabel_edges
 
 #: largest vertex count for the packed uint32 pair-key sort path
@@ -77,20 +84,95 @@ def filter_level(
     canonical pair, so sorting the directed form would double the
     dominant argsort for no information. ``n`` is the previous level's
     (static) vertex count — the bound on relabeled ids used for sort
-    sentinels. ``pack`` requires integral weights in [0, 255] and
-    E < 2^24 − 1 (the position index is packed).
+    sentinels. ``pack`` requires integral weights in [0, 255] and global
+    eids < 2^24 − 1 (the (w, eid) pair is packed jointly, so the sort
+    only orders the pair key and the segment-min settles the winner).
+
+    Output entries beyond ``m_new`` are sanitized to the identity
+    (lo = hi = 0, w = +inf, eid = IMAX, valid = False) so the arrays can
+    feed the next level — or a device residual — without a host pass.
     """
     e = und_lo.shape[0]
+    if e == 0:
+        # Fully contracted level: nothing to sort — the boundary flag
+        # construction below would otherwise build a length-1 array
+        # against zero-length sort keys. Return the empty residual.
+        z_i = jnp.zeros((0,), jnp.int32)
+        return FilterResult(
+            lo=z_i,
+            hi=z_i,
+            w=jnp.zeros((0,), w.dtype),
+            eid=z_i,
+            valid=jnp.zeros((0,), bool),
+            m_new=jnp.int32(0),
+        )
     ns, nd = relabel_edges(new_ids, und_lo, und_hi)
     lo = jnp.minimum(ns, nd)
     hi = jnp.maximum(ns, nd)
     real = valid & (lo != hi)
 
-    # Sort by (pair key, w, eid): duplicates become adjacent AND within
-    # each pair run the (w, eid)-lex minimum comes first, so the
-    # min-*position* winner below IS the (w, eid)-min representative —
-    # position alone would tie-break equal weights by array order, which
-    # stops tracking eid order after the first level.
+    if pack:
+        # Pack (w, eid) into one min-reducible value: the sort then only
+        # has to make duplicate pairs adjacent (single pair key — the
+        # dominant cost at CPU sort speeds), and the segment-min picks
+        # the (w, eid)-lex representative without position bookkeeping.
+        w_int = jnp.where(real, w, 0.0).astype(jnp.uint32)
+        wkey = jnp.where(real, pack32(w_int, eid), PACK_IDENTITY)
+        if n <= PAIR_PACK_LIMIT:
+            # Two-operand variadic sort: the pair key orders, the packed
+            # value rides along — no order permutation to materialize and
+            # the winning pair decodes straight from the key.
+            key = (lo.astype(jnp.uint32) << 16) | hi.astype(jnp.uint32)
+            key = jnp.where(real, key, jnp.uint32(0xFFFFFFFF))
+            key_s, wkey_s = jax.lax.sort((key, wkey), num_keys=1)
+            boundary = jnp.concatenate(
+                [jnp.ones((1,), bool), key_s[1:] != key_s[:-1]]
+            )
+            seg = jnp.cumsum(boundary.astype(jnp.int32)) - 1  # [0, E) ranks
+            if segmin is None:
+                minkey = jax.ops.segment_min(wkey_s, seg, num_segments=e)
+            else:
+                minkey = segmin(wkey_s, seg, e)
+            seg_live = minkey != PACK_IDENTITY
+            w_min, eid_min = unpack32(minkey)
+            # Every member of a segment carries the identical pair key, so
+            # a duplicate-index scatter is deterministic and recovers it.
+            keyseg = jnp.zeros((e,), jnp.uint32).at[seg].set(key_s)
+            lo_out = (keyseg >> 16).astype(jnp.int32)
+            hi_out = (keyseg & jnp.uint32(0xFFFF)).astype(jnp.int32)
+        else:
+            lo_k = jnp.where(real, lo, jnp.int32(n))
+            hi_k = jnp.where(real, hi, jnp.int32(n))
+            lo_s, hi_s, wkey_s = jax.lax.sort((lo_k, hi_k, wkey), num_keys=2)
+            boundary = jnp.concatenate(
+                [
+                    jnp.ones((1,), bool),
+                    (lo_s[1:] != lo_s[:-1]) | (hi_s[1:] != hi_s[:-1]),
+                ]
+            )
+            seg = jnp.cumsum(boundary.astype(jnp.int32)) - 1
+            if segmin is None:
+                minkey = jax.ops.segment_min(wkey_s, seg, num_segments=e)
+            else:
+                minkey = segmin(wkey_s, seg, e)
+            seg_live = minkey != PACK_IDENTITY
+            w_min, eid_min = unpack32(minkey)
+            lo_out = jnp.zeros((e,), jnp.int32).at[seg].set(lo_s)
+            hi_out = jnp.zeros((e,), jnp.int32).at[seg].set(hi_s)
+        return FilterResult(
+            lo=jnp.where(seg_live, lo_out, 0),
+            hi=jnp.where(seg_live, hi_out, 0),
+            w=jnp.where(seg_live, w_min.astype(w.dtype), INF),
+            eid=jnp.where(seg_live, eid_min, IMAX),
+            valid=seg_live,
+            m_new=jnp.sum(seg_live.astype(jnp.int32)),
+        )
+
+    # Float path: sort by (pair key, w, eid) so within each pair run the
+    # (w, eid)-lex minimum comes first and the min-*position* winner IS
+    # the representative — position alone would tie-break equal weights
+    # by array order, which stops tracking eid order after the first
+    # level.
     if n <= PAIR_PACK_LIMIT:
         key = (lo.astype(jnp.uint32) << 16) | hi.astype(jnp.uint32)
         key = jnp.where(real, key, jnp.uint32(0xFFFFFFFF))
@@ -116,28 +198,89 @@ def filter_level(
     seg = jnp.cumsum(boundary.astype(jnp.int32)) - 1  # [0, E) ranks
     pos = jnp.arange(e, dtype=jnp.int32)
 
-    if pack:
-        w_int = jnp.where(real_s, w_s, 0.0).astype(jnp.uint32)
-        kmin = jnp.where(real_s, pack32(w_int, pos), PACK_IDENTITY)
-        if segmin is None:
-            minkey = jax.ops.segment_min(kmin, seg, num_segments=e)
-        else:
-            minkey = segmin(kmin, seg, e)
-        _, winner = unpack32(minkey)
-        seg_live = minkey != PACK_IDENTITY
-    else:
-        em = segment_argmin(w_s, pos, (), seg, e, valid=real_s)
-        winner = em.eid
-        seg_live = em.w < INF
+    em = segment_argmin(w_s, pos, (), seg, e, valid=real_s)
+    winner = em.eid
+    seg_live = em.w < INF
 
     sel = jnp.clip(winner, 0, e - 1)
     return FilterResult(
-        lo=lo_s[sel],
-        hi=hi_s[sel],
-        w=w_s[sel],
-        eid=eid_s[sel],
+        lo=jnp.where(seg_live, lo_s[sel], 0),
+        hi=jnp.where(seg_live, hi_s[sel], 0),
+        w=jnp.where(seg_live, w_s[sel], INF),
+        eid=jnp.where(seg_live, eid_s[sel], IMAX),
         valid=seg_live,
         m_new=jnp.sum(seg_live.astype(jnp.int32)),
+    )
+
+
+def filter_level_callback(
+    und_lo: jax.Array,
+    und_hi: jax.Array,
+    w: jax.Array,
+    eid: jax.Array,
+    valid: jax.Array,
+    new_ids: jax.Array,
+    *,
+    n: int,
+) -> FilterResult:
+    """:func:`filter_level` twin that routes the dedupe through the host
+    (``jax.pure_callback`` around :func:`filter_level_host`), with the
+    same static-capacity padded outputs.
+
+    This is the CPU materialization of the *fused* level's dedupe stage:
+    on CPU backends device and host share memory, so the callback is a
+    plain function call (no transfer), and numpy's radix/lexsort beats
+    XLA's CPU sort ~5×. The trace stays a single jitted executable; on
+    TPU the engine picks :func:`filter_level` instead (the sort and the
+    sorted-segment Pallas kernel stay on device — a host hop there would
+    cost a PCIe round-trip per level, the very thing fusion removes).
+    """
+    e = und_lo.shape[0]
+    if e == 0:
+        z_i = jnp.zeros((0,), jnp.int32)
+        return FilterResult(
+            lo=z_i,
+            hi=z_i,
+            w=jnp.zeros((0,), w.dtype),
+            eid=z_i,
+            valid=jnp.zeros((0,), bool),
+            m_new=jnp.int32(0),
+        )
+
+    def _host(lo_h, hi_h, w_h, eid_h, valid_h, new_ids_h):
+        import numpy as np
+
+        l2, h2, w2, e2 = filter_level_host(
+            lo_h, hi_h, w_h, eid_h, valid_h, new_ids_h, n
+        )
+        m = len(l2)
+        out_lo = np.zeros(e, np.int32)
+        out_hi = np.zeros(e, np.int32)
+        out_w = np.full(e, np.inf, np.float32)
+        out_eid = np.full(e, np.iinfo(np.int32).max, np.int32)
+        out_lo[:m], out_hi[:m] = l2, h2
+        out_w[:m], out_eid[:m] = w2, e2
+        return out_lo, out_hi, out_w, out_eid, np.int32(m)
+
+    s = jax.ShapeDtypeStruct
+    lo2, hi2, w2, eid2, m_new = jax.pure_callback(
+        _host,
+        (
+            s((e,), jnp.int32),
+            s((e,), jnp.int32),
+            s((e,), jnp.float32),
+            s((e,), jnp.int32),
+            s((), jnp.int32),
+        ),
+        und_lo, und_hi, w, eid, valid, new_ids,
+    )
+    return FilterResult(
+        lo=lo2,
+        hi=hi2,
+        w=w2.astype(w.dtype),
+        eid=eid2,
+        valid=jnp.arange(e) < m_new,
+        m_new=m_new,
     )
 
 

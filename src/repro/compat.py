@@ -45,7 +45,12 @@ def _optimization_barrier_jvp(primals, tangents):
 
 
 def make_mesh(shape, axes):
-    """``jax.make_mesh`` with explicit Auto axis types when supported."""
+    """``jax.make_mesh`` with explicit Auto axis types when supported.
+
+    Floor note: ``jax.make_mesh`` itself exists from 0.4.35 — the
+    requirements/CI floor — so only the ``axis_types`` spelling needs a
+    fallback here.
+    """
     shape, axes = tuple(shape), tuple(axes)
     try:
         return jax.make_mesh(

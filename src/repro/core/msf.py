@@ -201,6 +201,7 @@ def msf(
     *,
     coarsen=None,
     segmin: str | None = None,
+    fused: bool | None = None,
     **kw,
 ) -> MSFResult:
     """Compute the minimum spanning forest of ``graph``.
@@ -224,6 +225,10 @@ def msf(
       ``repro.coarsen.CoarsenConfig`` (or ``True`` for defaults) to run
       Borůvka contract-and-filter levels first and hand only the residual
       graph to this driver (DESIGN.md §7). Incompatible with ``parent0``.
+    fused: with ``coarsen=``, run each level as one jitted
+      contract/relabel/sort-dedupe/compact call (device-resident between
+      levels, DESIGN.md §7.6); overrides ``CoarsenConfig.fused``.
+      Meaningless without ``coarsen=`` (rejected).
     """
     if coarsen is not None and coarsen is not False:
         from repro.coarsen.engine import coarsen_msf  # lazy: avoid cycle
@@ -231,8 +236,16 @@ def msf(
         if kw.get("parent0") is not None:
             raise ValueError("coarsen= cannot be combined with parent0=")
         config = None if coarsen is True else coarsen
-        return coarsen_msf(graph, config=config, segmin=segmin, **kw)
+        return coarsen_msf(graph, config=config, segmin=segmin, fused=fused, **kw)
+    if fused:
+        raise ValueError("fused=True requires coarsen= (it fuses the levels)")
     if kw.get("pack"):
+        if segmin == "sorted":
+            raise ValueError(
+                "segmin='sorted' needs sorted segment ids — only the "
+                "coarsen dedupe provides them; the flat hook loop's ids "
+                "are unsorted (use 'pallas'/'jnp'/'auto' here)"
+            )
         from repro.kernels.ops import make_packed_segmin  # lazy: kernels layer
 
         kw["segmin"] = make_packed_segmin(segmin or "auto")

@@ -17,6 +17,7 @@ from repro.kernels.segment_min_bucketed import (
     segment_min_bucketed_pallas,
     segment_min_flat_pallas,
 )
+from repro.kernels.segment_min_sorted import segment_min_sorted_pallas
 
 INF = jnp.float32(jnp.inf)
 IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
@@ -110,15 +111,66 @@ def segment_min_flat(
     return out[:num_segments]
 
 
+@partial(
+    jax.jit,
+    static_argnames=("num_segments", "block_rows", "block_edges", "interpret"),
+)
+def segment_min_sorted(
+    keys: jax.Array,
+    segs: jax.Array,
+    *,
+    num_segments: int,
+    block_rows: int = 128,
+    block_edges: int = 512,
+    interpret: bool | None = None,
+):
+    """Contiguous-range packed segment-min over **sorted** segment ids.
+
+    Same pad-and-slice contract as :func:`segment_min_flat`, but the
+    kernel scalar-prefetches per-row-block edge-block offsets so each
+    grid step reads only the blocks its segments touch — O(E) lanes for
+    the coarsening dedupe where the flat kernel is O(E²/block_rows).
+    Padding entries get segment id ``num_segments_padded − 1`` (identity
+    keys), preserving sortedness and covering the tail row block.
+    """
+    e = keys.shape[0]
+    e_pad = max(block_edges, -(-e // block_edges) * block_edges)
+    s_pad = max(block_rows, -(-num_segments // block_rows) * block_rows)
+    keys_p = jnp.full((e_pad,), UMAX, jnp.uint32).at[:e].set(keys)
+    segs_p = jnp.full((e_pad,), s_pad - 1, jnp.int32).at[:e].set(segs)
+    out = segment_min_sorted_pallas(
+        keys_p,
+        segs_p,
+        num_segments=s_pad,
+        block_rows=block_rows,
+        block_edges=block_edges,
+        interpret=_use_interpret(interpret),
+    )
+    return out[:num_segments]
+
+
+def flat_segmin_backend(backend: str | None) -> str | None:
+    """Resolve a segmin backend request for a *flat* reduction site —
+    one whose segment ids are unsorted (the MSF hook loops, the residual
+    solve). "sorted" is dedupe-only (the contiguous-range kernel silently
+    loses out-of-order contributions), so it degrades to "auto" here;
+    every other request passes through. The single home of that rule —
+    call sites must not re-implement it.
+    """
+    return "auto" if backend == "sorted" else backend
+
+
 @lru_cache(maxsize=None)
 def make_packed_segmin(backend: str = "auto"):
     """Resolve a packed (uint32 key, int32 seg) → uint32 [n] segment-min.
 
     ``backend``: "jnp" (pure-JAX ``segment_min``), "pallas" (the flat
     Pallas kernel, ``interpret=True`` selected automatically off
-    ``jax.default_backend()``), or "auto" (pallas on TPU, jnp elsewhere —
-    interpreted Pallas is orders of magnitude slower than XLA on CPU, so
-    auto never picks it there).
+    ``jax.default_backend()``), "sorted" (the contiguous-range Pallas
+    kernel — the caller's segment ids MUST be non-decreasing, e.g. the
+    coarsening dedupe's boundary prefix-sum ranks), or "auto" (pallas on
+    TPU, jnp elsewhere — interpreted Pallas is orders of magnitude slower
+    than XLA on CPU, so auto never picks it there).
 
     Cached so repeat calls return the *same* callable — callers pass the
     result as a jit-static argument and must not miss the jit cache.
@@ -135,6 +187,11 @@ def make_packed_segmin(backend: str = "auto"):
             return segment_min_flat(keys, segs, num_segments=num_segments)
 
         return _pallas
+    if backend == "sorted":
+        def _sorted(keys, segs, num_segments):
+            return segment_min_sorted(keys, segs, num_segments=num_segments)
+
+        return _sorted
     raise ValueError(f"unknown segment-min backend {backend!r}")
 
 

@@ -53,3 +53,13 @@ def segment_min_flat_ref(keys: jax.Array, segs: jax.Array, num_segments: int):
     ``segment_min``'s identity for uint32 is the dtype max).
     """
     return jax.ops.segment_min(keys, segs, num_segments=num_segments)
+
+
+def segment_min_sorted_ref(keys: jax.Array, segs: jax.Array, num_segments: int):
+    """Oracle for the sorted-segment packed segment-min kernel.
+
+    Identical reduction to :func:`segment_min_flat_ref`; the sorted kernel
+    only restricts *how* segment ids may be laid out (non-decreasing), not
+    what the result is, so the oracle is the same segment_min.
+    """
+    return jax.ops.segment_min(keys, segs, num_segments=num_segments)

@@ -1,0 +1,187 @@
+"""Pallas TPU kernel: packed-key segment-min over *sorted* segment ids.
+
+The coarsening dedupe (``repro.coarsen.filter``) produces segment ids by
+a boundary-flag prefix-sum over the *sorted* pair keys, so ``segs`` is
+non-decreasing and every segment occupies one contiguous edge range. The
+flat kernel (``segment_min_flat_pallas``) ignores that structure and
+rescans every edge block for every output row block — O(E²/block_rows)
+lanes at ``num_segments = E``. This kernel exploits it:
+
+- Each output row block ``rb`` covers segments
+  ``[rb·block_rows, (rb+1)·block_rows)``; sortedness means those
+  segments live in a contiguous *edge-block* range
+  ``[first_eb[rb], last_eb[rb]]``.
+- The grid is one step per (row block, edge block) *intersection pair*.
+  The staircase structure bounds the pair count by
+  ``num_edge_blocks + num_row_blocks`` — linear, not quadratic — and the
+  per-row-block edge-block offsets are **scalar-prefetched**
+  (``pltpu.PrefetchScalarGridSpec``) so the BlockSpec index maps DMA
+  exactly the blocks each step touches and nothing else.
+- The output tile stays VMEM-resident across a row block's consecutive
+  steps and accumulates with ``min`` (first touch initializes to the
+  identity); steps padded beyond the live pair count re-reduce the final
+  pair, which is idempotent under min.
+
+Keys are the pack32 layout (``repro.core.semiring``), identity/padding
+= 0xFFFFFFFF. Correctness does NOT require masking boundary blocks: an
+edge whose segment falls outside the step's row block compares unequal
+to every local row and contributes the identity.
+
+Contract: ``segs`` must be non-decreasing. Violations are not detected
+(the check would cost the O(E) pass this kernel exists to avoid) — the
+result silently loses the out-of-order contributions. Callers with
+unsorted ids want ``segment_min_flat_pallas``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.segment_min_bucketed import _validate_blocked
+
+UMAX = np.uint32(0xFFFFFFFF)
+
+
+def build_step_maps(
+    segs: jax.Array,
+    *,
+    num_segments: int,
+    block_rows: int,
+    block_edges: int,
+):
+    """Per-grid-step (row block, edge block) indices for the sorted kernel.
+
+    Pure jnp (runs inside the caller's jit; the results feed the kernel as
+    scalar-prefetch operands). ``segs`` is the full padded [E] sorted id
+    array. Returns int32 ``(rb_map, eb_map)`` of static length
+    ``num_edge_blocks + num_row_blocks``:
+
+    - ``rb_map`` is non-decreasing and visits *every* row block at least
+      once (empty row blocks get one step so their output tile is
+      initialized to the identity);
+    - within a row block, ``eb_map`` walks ``first_eb..last_eb``;
+    - steps beyond the live pair count clamp to the last live pair
+      (idempotent re-reduction).
+    """
+    e = segs.shape[0]
+    ne = e // block_edges
+    r = num_segments // block_rows
+    rb = jnp.arange(r, dtype=jnp.int32)
+    # Edge index range [p_lo, p_hi) of the segments in row block rb.
+    p_lo = jnp.searchsorted(segs, rb * block_rows).astype(jnp.int32)
+    p_hi = jnp.searchsorted(segs, (rb + 1) * block_rows).astype(jnp.int32)
+    first_eb = jnp.clip(p_lo // block_edges, 0, ne - 1)
+    last_eb = jnp.where(
+        p_hi > p_lo, jnp.clip((p_hi - 1) // block_edges, 0, ne - 1), first_eb
+    )
+    last_eb = jnp.maximum(last_eb, first_eb)
+    start = jnp.cumsum(last_eb - first_eb + 1) - (last_eb - first_eb + 1)
+    steps = jnp.arange(ne + r, dtype=jnp.int32)
+    rb_map = jnp.clip(
+        jnp.searchsorted(start, steps, side="right").astype(jnp.int32) - 1,
+        0,
+        r - 1,
+    )
+    eb_map = jnp.minimum(
+        first_eb[rb_map] + (steps - start[rb_map]), last_eb[rb_map]
+    )
+    return rb_map, eb_map.astype(jnp.int32)
+
+
+def _sorted_kernel(
+    rb_map_ref, eb_map_ref, keys_ref, segs_ref, out_ref, *, block_rows, block_edges
+):
+    s = pl.program_id(0)
+    rb = rb_map_ref[s]
+
+    first = jnp.logical_or(s == 0, rb_map_ref[jnp.maximum(s - 1, 0)] != rb)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.full((block_rows,), UMAX, jnp.uint32)
+
+    keys = keys_ref[0, :]  # [BE] uint32
+    segs = segs_ref[0, :]  # [BE] int32 sorted global segment ids
+    local = segs - rb * block_rows
+    r = jax.lax.broadcasted_iota(jnp.int32, (block_rows, block_edges), 0)
+    eq = local[None, :] == r  # out-of-block segments match no local row
+    vals = jnp.where(eq, keys[None, :], UMAX)
+    out_ref[...] = jnp.minimum(out_ref[...], jnp.min(vals, axis=1))
+
+
+def segment_min_sorted_pallas(
+    keys: jax.Array,
+    segs: jax.Array,
+    *,
+    num_segments: int,
+    block_rows: int = 128,
+    block_edges: int = 512,
+    interpret: bool = False,
+):
+    """Sorted-segment packed segment-min: keys uint32 [E], segs int32 [E]
+    non-decreasing with values in [0, num_segments). Returns uint32
+    [num_segments] (UMAX at empty segments).
+
+    Shape contract mirrors ``segment_min_flat_pallas`` (E a multiple of
+    ``block_edges``, ``num_segments`` a multiple of ``block_rows``; callers
+    pad via ``kernels.ops.segment_min_sorted``); cost is
+    O((E/block_edges + num_segments/block_rows) · block_rows·block_edges)
+    lanes instead of the flat kernel's O(num_segments·E/block_rows).
+    """
+    _validate_blocked(keys, segs, block_rows)
+    if keys.ndim != 1:
+        raise ValueError(f"expected flat [E] layout, got {keys.shape}")
+    if block_edges % 128:
+        raise ValueError(f"block_edges={block_edges} must be a multiple of 128 lanes")
+    if block_rows % 128:
+        raise ValueError(
+            f"block_rows={block_rows} must be a multiple of 128 (1-D output tile)"
+        )
+    e = keys.shape[0]
+    if e == 0:
+        raise ValueError("empty edge array; pad to >= one block of edges")
+    if e % block_edges:
+        raise ValueError(
+            f"edge count {e} must be a multiple of block_edges={block_edges} "
+            f"(pad with identity keys)"
+        )
+    if num_segments <= 0 or num_segments % block_rows:
+        raise ValueError(
+            f"num_segments={num_segments} must be a positive multiple of "
+            f"block_rows={block_rows} (pad the output)"
+        )
+    ne = e // block_edges
+    rb_map, eb_map = build_step_maps(
+        segs,
+        num_segments=num_segments,
+        block_rows=block_rows,
+        block_edges=block_edges,
+    )
+    kernel = functools.partial(
+        _sorted_kernel, block_rows=block_rows, block_edges=block_edges
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ne + num_segments // block_rows,),
+        in_specs=[
+            pl.BlockSpec((1, block_edges), lambda s, rbm, ebm: (ebm[s], 0)),
+            pl.BlockSpec((1, block_edges), lambda s, rbm, ebm: (ebm[s], 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda s, rbm, ebm: (rbm[s],)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_segments,), jnp.uint32),
+        interpret=interpret,
+    )(
+        rb_map,
+        eb_map,
+        keys.reshape(ne, block_edges),
+        segs.reshape(ne, block_edges),
+    )

@@ -94,9 +94,20 @@ class StreamingMSF:
         reduction); ``True`` asserts it and rejects unpackable batches.
     segmin: packed segment-min backend for the inner loop — "jnp",
         "pallas" (the flat Pallas kernel, ``interpret=True`` selected
-        automatically off ``jax.default_backend()``) or "auto" (Pallas
-        only on TPU — interpreted Pallas on CPU is orders of magnitude
-        slower than XLA's segment_min).
+        automatically off ``jax.default_backend()``), "sorted" (the
+        contiguous-range kernel; only meaningful for the coarsen
+        recompute's dedupe — the flat hook loop falls back to "auto") or
+        "auto" (Pallas only on TPU — interpreted Pallas on CPU is orders
+        of magnitude slower than XLA's segment_min).
+    coarsen: ``None`` (always the flat union recompute), ``True`` or a
+        ``repro.coarsen.CoarsenConfig`` — rebuild via **fused**
+        contract-and-filter levels (one jit per level, sorted-segment
+        dedupe) whenever the union holds at least ``coarsen_threshold``
+        live edges. The level dedupe is where the sorted Pallas kernel
+        applies: its segment ids are sorted after the device sort.
+    coarsen_threshold: live undirected union edges (forest + batch) at
+        which the coarsen recompute kicks in; below it the flat solve is
+        cheaper than the level machinery.
     variant / shortcut / capacity: forwarded to ``repro.core.msf``.
     """
 
@@ -110,6 +121,8 @@ class StreamingMSF:
         compact_trigger: float = 0.25,
         pack: bool | None = None,
         segmin: str = "auto",
+        coarsen=None,
+        coarsen_threshold: int = 1 << 15,
         variant: str = "complete",
         shortcut: str = "complete",
         capacity: int = 1 << 16,
@@ -125,6 +138,21 @@ class StreamingMSF:
         self._msf_opts = dict(variant=variant, shortcut=shortcut, capacity=capacity)
         self._pack = pack
         self._segmin = segmin
+        self._coarsen_cfg = None
+        if coarsen is not None and coarsen is not False:
+            from repro.coarsen.engine import CoarsenConfig  # lazy: layer cycle
+            import dataclasses
+
+            cfg = CoarsenConfig() if coarsen is True else coarsen
+            # The union rebuild always takes the fused device-resident
+            # levels; the sorted-dedupe backend follows ``segmin``.
+            self._coarsen_cfg = dataclasses.replace(
+                cfg, fused=True, segmin=segmin
+            )
+        self.coarsen_threshold = int(coarsen_threshold)
+        #: CoarsenStats of the latest update when the coarsen rebuild ran,
+        #: None when the flat recompute was taken (or never enabled).
+        self.last_coarsen_stats = None
         self._packable = True  # conjunction over every inserted batch
         self.adaptive_capacity = bool(adaptive_capacity)
         self._min_capacity = min(next_pow2(min_capacity, 1), self.batch_capacity)
@@ -390,12 +418,30 @@ class StreamingMSF:
         # already-seen buffer shape, so it is part of the executable key.
         self._union_shapes.add((tuple(g.src.shape), use_pack))
         self.last_union_shape = tuple(g.src.shape)
-        r = msf(
-            g,
-            pack=use_pack,
-            segmin=self._segmin if use_pack else None,
-            **self._msf_opts,
-        )
+        if self._coarsen_cfg is not None and f + b >= self.coarsen_threshold:
+            from repro.coarsen.engine import CoarsenMSF  # lazy: layer cycle
+
+            eng = CoarsenMSF(
+                self._coarsen_cfg,
+                pack=use_pack,
+                segmin=self._segmin if use_pack else None,
+                **self._msf_opts,
+            )
+            r = eng(g)
+            self.last_coarsen_stats = eng.last_stats
+        else:
+            # "sorted" is a dedupe-only backend (coarsen path); the flat
+            # hook loop's segment ids are unsorted → degrade.
+            from repro.kernels.ops import flat_segmin_backend
+
+            flat_segmin = flat_segmin_backend(self._segmin)
+            self.last_coarsen_stats = None
+            r = msf(
+                g,
+                pack=use_pack,
+                segmin=flat_segmin if use_pack else None,
+                **self._msf_opts,
+            )
 
         n_f = int(r.n_msf_edges)
         sel = np.asarray(r.msf_eids)[:n_f]  # local union indices → rows

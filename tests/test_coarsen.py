@@ -241,20 +241,158 @@ def test_weight_below_cutoff_is_flat():
 
 
 # ---------------------------------------------------------------------------
+# fused one-jit level pipeline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+@pytest.mark.parametrize("dedupe", ["host", "device"])
+def test_fused_matches_flat(gname, dedupe):
+    """Acceptance: the fused level pipeline returns the identical MSF edge
+    set (global eids, (w, eid) total order) as the flat solver, for both
+    the in-jit device dedupe and the zero-copy host-callback dedupe."""
+    g = GRAPHS[gname]
+    flat = msf(g)
+    cfg = CoarsenConfig(rounds_per_level=2, cutoff=16, dedupe=dedupe)
+    co = msf(g, coarsen=cfg, fused=True)
+    assert _eids(co) == _eids(flat)
+    assert int(co.n_msf_edges) == int(flat.n_msf_edges)
+    assert abs(float(co.weight) - nx_free_msf_weight(g)) < 1e-3
+    assert _same_partition(co.parent, flat.parent)
+
+
+@pytest.mark.parametrize("segmin", [None, "jnp", "pallas", "sorted"])
+def test_fused_pack_segmin_backends(segmin):
+    """Every packed segment-min backend — including the sorted-segment
+    Pallas kernel the dedupe step now supports — through the fused path."""
+    g = random_graph(200, 700, seed=17)
+    cfg = CoarsenConfig(
+        cutoff=16, pack=True, segmin=segmin, dedupe="device", fused=True
+    )
+    co = coarsen_msf(g, config=cfg)
+    assert _eids(co) == _eids(msf(g))
+
+
+def test_fused_one_executable_per_level_shape():
+    """Acceptance: re-running graphs whose level shapes were already seen
+    must not grow the fused_level jit cache — exactly one compiled
+    executable per (n, edge-capacity, n0) level shape."""
+    from repro.coarsen.engine import fused_level
+
+    cfg = CoarsenConfig(rounds_per_level=2, cutoff=16, fused=True)
+    eng = CoarsenMSF(cfg)
+    g1 = random_graph(300, 900, seed=1)
+    r1 = eng(g1)
+    warm = fused_level._cache_size()
+    assert warm >= len(eng.last_stats.levels) >= 1
+    r1b = eng(g1)  # identical graph: every level shape already compiled
+    g2 = random_graph(300, 900, seed=77)  # same shapes, different topology
+    eng(g2)
+    assert fused_level._cache_size() == warm
+    assert _eids(r1) == _eids(r1b)
+
+
+def test_fused_multiple_levels_device_resident_bookkeeping():
+    g = rmat_graph(10, 4, seed=13)
+    eng = CoarsenMSF(
+        CoarsenConfig(rounds_per_level=1, cutoff=8, max_levels=8, fused=True)
+    )
+    r = eng(g)
+    st = eng.last_stats
+    assert len(st.levels) >= 2
+    ns = [l.n for l in st.levels] + [st.residual_n]
+    assert all(a > b for a, b in zip(ns, ns[1:]))  # strict vertex shrink
+    ms = [l.m for l in st.levels] + [st.residual_m]
+    assert all(a >= b for a, b in zip(ms, ms[1:]))  # filter never grows m
+    assert _eids(r) == _eids(msf(g))
+
+
+def test_fused_large_n_lexsort_key_path():
+    """n > 2^16 through the fused device dedupe (two-key variadic sort)."""
+    n = (1 << 16) + 512
+    rng = np.random.default_rng(37)
+    m = 3000
+    g = from_edges(
+        rng.integers(0, n, m), rng.integers(0, n, m),
+        rng.integers(1, 256, m).astype(np.float64), n,
+    )
+    flat = msf(g)
+    for dd in ("device", "host"):
+        cfg = CoarsenConfig(cutoff=1024, dedupe=dd, fused=True)
+        assert _eids(coarsen_msf(g, config=cfg)) == _eids(flat)
+
+
+def test_msf_fused_dispatcher_validation():
+    g = random_graph(150, 500, seed=19)
+    r = msf(g, coarsen=CoarsenConfig(cutoff=8), fused=True)
+    assert _eids(r) == _eids(msf(g))
+    with pytest.raises(ValueError):
+        msf(g, fused=True)  # fused requires coarsen=
+    with pytest.raises(ValueError):
+        msf(g, pack=True, segmin="sorted")  # dedupe-only backend
+
+
+def test_filter_level_empty_input():
+    """Regression (this PR): a fully contracted level hands the filter a
+    zero-length edge array; it must return an empty residual instead of
+    building boundary flags against a zero-length sort."""
+    from repro.coarsen.filter import filter_level_callback
+
+    z = jnp.zeros((0,), jnp.int32)
+    zw = jnp.zeros((0,), jnp.float32)
+    zb = jnp.zeros((0,), bool)
+    new_ids = jnp.zeros((4,), jnp.int32)
+    for fn in (filter_level, filter_level_callback):
+        fr = fn(z, z, zw, z, zb, new_ids, n=4)
+        assert int(fr.m_new) == 0
+        assert fr.lo.shape == (0,) and fr.valid.shape == (0,)
+
+
+def test_contract_level_und_matches_directed():
+    """The undirected two-direction contraction must be bit-identical to
+    the concatenated directed form (same hooks, eids, weight, relabel)."""
+    from repro.coarsen.contract import contract_level_und
+
+    g = random_graph(256, 1024, seed=11)
+    # build canonical undirected arrays from the symmetric graph
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    w, eid, valid = np.asarray(g.w), np.asarray(g.eid), np.asarray(g.valid)
+    sel = valid & (src < dst)
+    lo, hi, wu, eu = src[sel], dst[sel], w[sel], eid[sel]
+    vu = np.ones(len(lo), bool)
+    for pack in (False, True):
+        und = contract_level_und(
+            lo, hi, wu, eu, vu,
+            n=g.n, eid_capacity=1024, rounds=2, pack=pack,
+        )
+        cat = contract_level(
+            np.concatenate([lo, hi]), np.concatenate([hi, lo]),
+            np.concatenate([wu, wu]), np.concatenate([eu, eu]),
+            np.concatenate([vu, vu]), n=g.n, rounds=2, pack=pack,
+        )
+        np.testing.assert_array_equal(np.asarray(und.parent), np.asarray(cat.parent))
+        np.testing.assert_array_equal(np.asarray(und.new_ids), np.asarray(cat.new_ids))
+        assert int(und.n_next) == int(cat.n_next)
+        assert float(und.weight) == float(cat.weight)
+        assert _eids(und) == _eids(cat)
+
+
+# ---------------------------------------------------------------------------
 # distributed pre-contraction hook
 # ---------------------------------------------------------------------------
 
 
-def test_precontract_partition_merge(host_mesh):
+def test_precontract_partition_merge(dist_mesh, dist_mesh_shape):
     from repro.core.msf_dist import msf_distributed
 
+    rows, cols = dist_mesh_shape
     g = random_graph(300, 1000, seed=29)
     part, prelude = precontract_partition(
-        g, 1, 1, config=CoarsenConfig(rounds_per_level=2, cutoff=16)
+        g, rows, cols, config=CoarsenConfig(rounds_per_level=2, cutoff=16)
     )
     assert part.n_pad >= prelude.stats.residual_n
     assert len(prelude.stats.levels) >= 1  # contraction actually ran
-    drv = msf_distributed(part, host_mesh, shortcut="csp", capacity=512)
+    drv = msf_distributed(part, dist_mesh, shortcut="csp", capacity=512)
     dist = drv(part.src_row, part.dst_col, part.w, part.eid, part.valid)
     merged = merge_distributed(prelude, dist)
     flat = msf(g)

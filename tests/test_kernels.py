@@ -162,3 +162,112 @@ def test_kernel_full_msf_hook_step():
         a[s, d] = min(a[s, d], ww)
     minw, _, _ = ops.multilinear_dense(p, jnp.array(a))
     np.testing.assert_allclose(np.asarray(minw), np.asarray(em.w))
+
+
+# ---------------------------------------------------------------------------
+# sorted-segment kernel (scalar-prefetched contiguous ranges)
+# ---------------------------------------------------------------------------
+
+
+def _sorted_case(e, n_seg, seg):
+    """Run the sorted kernel (interpret mode on CPU) against the oracle and
+    a direct numpy scatter-min."""
+    rng = np.random.default_rng(e * 7 + n_seg)
+    keys = rng.integers(0, 1 << 32, e, dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(
+        ops.segment_min_sorted(jnp.array(keys), jnp.array(seg), num_segments=n_seg)
+    )
+    want = np.asarray(
+        ref.segment_min_sorted_ref(jnp.array(keys), jnp.array(seg), n_seg)
+    )
+    np.testing.assert_array_equal(got, want)
+    direct = np.full(n_seg, 0xFFFFFFFF, np.uint64)
+    if e:
+        np.minimum.at(direct, seg, keys.astype(np.uint64))
+    np.testing.assert_array_equal(got.astype(np.uint64), direct)
+
+
+def test_segment_min_sorted_single_segment():
+    """Every edge in one segment — one row block, all edge blocks walked."""
+    e = 1500  # spans 3 × 512-lane edge blocks
+    _sorted_case(e, 1, np.zeros(e, np.int32))
+    _sorted_case(e, 64, np.full(e, 63, np.int32))  # last segment only
+
+
+def test_segment_min_sorted_all_singletons():
+    """seg = arange: segment count == edge count (the dedupe's worst case —
+    exactly the num_segments = E shape the flat kernel rescans on)."""
+    for e in [128, 513, 2048]:
+        _sorted_case(e, e, np.arange(e, dtype=np.int32))
+
+
+def test_segment_min_sorted_segment_spanning_blocks():
+    """One giant segment straddles several 512-lane edge blocks between
+    ordinary neighbors — exercises the per-row-block block-range walk."""
+    e = 4 * 512
+    seg = np.concatenate(
+        [np.zeros(100), np.full(1500, 1), np.full(e - 1600, 2)]
+    ).astype(np.int32)
+    _sorted_case(e, 384, seg)
+
+
+def test_segment_min_sorted_non_lane_multiple_tails():
+    """Edge counts and segment counts that are NOT multiples of the lane /
+    sublane tiles — the wrapper pads both dims and slices back."""
+    rng = np.random.default_rng(5)
+    for e, n_seg in [(1, 1), (129, 37), (513, 130), (1000, 999), (777, 5)]:
+        seg = np.sort(rng.integers(0, n_seg, e)).astype(np.int32)
+        _sorted_case(e, n_seg, seg)
+
+
+def test_segment_min_sorted_empty_segments_and_gaps():
+    """Row blocks with no segments at all must still initialize to the
+    identity (first-touch init steps), including trailing empty blocks."""
+    e = 600
+    rng = np.random.default_rng(9)
+    # occupy only segments [256, 300): blocks 0, 1 and 2.3+ stay empty
+    seg = np.sort(rng.integers(256, 300, e)).astype(np.int32)
+    _sorted_case(e, 1024, seg)
+    _sorted_case(0, 256, np.zeros(0, np.int32))  # fully empty input
+
+
+def test_segment_min_sorted_random_sweep():
+    rng = np.random.default_rng(11)
+    for e, n_seg in [(500, 128), (2000, 300), (4096, 4096)]:
+        seg = np.sort(rng.integers(0, n_seg, e)).astype(np.int32)
+        _sorted_case(e, n_seg, seg)
+
+
+def test_segment_min_sorted_backend_resolution():
+    """make_packed_segmin('sorted') routes through the sorted kernel and is
+    cached (same callable per backend — jit-static identity)."""
+    fn = ops.make_packed_segmin("sorted")
+    assert fn is ops.make_packed_segmin("sorted")
+    assert fn is not ops.make_packed_segmin("jnp")
+    rng = np.random.default_rng(13)
+    e, n_seg = 700, 301
+    seg = np.sort(rng.integers(0, n_seg, e)).astype(np.int32)
+    keys = rng.integers(0, 1 << 32, e, dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(fn(jnp.array(keys), jnp.array(seg), n_seg))
+    want = np.asarray(
+        ref.segment_min_sorted_ref(jnp.array(keys), jnp.array(seg), n_seg)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_segment_min_sorted_validation():
+    from repro.kernels.segment_min_sorted import segment_min_sorted_pallas
+
+    kf = jnp.zeros((512,), jnp.uint32)
+    sf = jnp.zeros((512,), jnp.int32)
+    with pytest.raises(ValueError, match="flat"):
+        segment_min_sorted_pallas(
+            jnp.zeros((2, 128), jnp.uint32), jnp.zeros((2, 128), jnp.int32),
+            num_segments=128,
+        )
+    with pytest.raises(ValueError, match="multiple of block_edges"):
+        segment_min_sorted_pallas(kf[:100], sf[:100], num_segments=128)
+    with pytest.raises(ValueError, match="num_segments"):
+        segment_min_sorted_pallas(kf, sf, num_segments=100)
+    with pytest.raises(ValueError, match="empty edge array"):
+        segment_min_sorted_pallas(kf[:0], sf[:0], num_segments=128)

@@ -13,25 +13,29 @@ from repro.graphs.structures import nx_free_msf_weight
 
 
 @pytest.mark.parametrize("shortcut", ["csp", "baseline", "os"])
-def test_distributed_single_device(host_mesh, shortcut):
+def test_distributed_mesh(dist_mesh, dist_mesh_shape, shortcut):
+    """1×1 degenerate on a single device; the CI multidevice job forces 8
+    host devices so the same test runs the real 2×4 collective schedule."""
+    rows, cols = dist_mesh_shape
     g = random_graph(150, 500, seed=3)
-    part = partition_edges_2d(g, 1, 1)
-    drv = msf_distributed(part, host_mesh, shortcut=shortcut, capacity=64)
+    part = partition_edges_2d(g, rows, cols)
+    drv = msf_distributed(part, dist_mesh, shortcut=shortcut, capacity=64)
     r = drv(part.src_row, part.dst_col, part.w, part.eid, part.valid)
     assert abs(float(r.weight) - nx_free_msf_weight(g)) < 1e-3
 
 
 @pytest.mark.parametrize("shortcut", ["os", "csp"])
 @pytest.mark.parametrize("capacity", [1, 2, 8])
-def test_os_policy_overflow_fallback(host_mesh, shortcut, capacity):
+def test_os_policy_overflow_fallback(dist_mesh, dist_mesh_shape, shortcut, capacity):
     """CSP-overflow fallback (core/msf_dist.py OS policy): with a tiny
     prefetch capacity the first iterations hook far more roots than the
     changed-map holds, so ``lax.cond`` must take the baseline-shortcut
     branch mid-run (later iterations hook few and flip back to CSP) —
     and the result must still match the oracle."""
+    rows, cols = dist_mesh_shape
     g = random_graph(200, 700, seed=11)
-    part = partition_edges_2d(g, 1, 1)
-    drv = msf_distributed(part, host_mesh, shortcut=shortcut, capacity=capacity)
+    part = partition_edges_2d(g, rows, cols)
+    drv = msf_distributed(part, dist_mesh, shortcut=shortcut, capacity=capacity)
     r = drv(part.src_row, part.dst_col, part.w, part.eid, part.valid)
     # a connected-ish random graph hooks >> capacity roots in iteration 1,
     # guaranteeing the overflow branch ran at least once
@@ -39,13 +43,14 @@ def test_os_policy_overflow_fallback(host_mesh, shortcut, capacity):
     assert abs(float(r.weight) - nx_free_msf_weight(g)) < 1e-3
 
 
-def test_os_policy_overflow_fallback_high_diameter(host_mesh):
+def test_os_policy_overflow_fallback_high_diameter(dist_mesh, dist_mesh_shape):
     """Grid graphs drive many shortcut sub-iterations — the worst case for
     the baseline fallback loop; exercised with capacity below the first
     hook wave."""
+    rows, cols = dist_mesh_shape
     g = grid_road_graph(14, 15, seed=4)
-    part = partition_edges_2d(g, 1, 1)
-    drv = msf_distributed(part, host_mesh, shortcut="os", capacity=2)
+    part = partition_edges_2d(g, rows, cols)
+    drv = msf_distributed(part, dist_mesh, shortcut="os", capacity=2)
     r = drv(part.src_row, part.dst_col, part.w, part.eid, part.valid)
     assert abs(float(r.weight) - nx_free_msf_weight(g)) < 1e-3
 

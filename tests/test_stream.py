@@ -408,3 +408,66 @@ def test_microbatcher_single_snapshot_window():
     with pytest.raises(KeyError):
         mb.result(t1)
     assert mb.result(t4)
+
+
+def test_stream_coarsen_recompute_matches_flat_engine():
+    """The coarsen-aware union rebuild (fused levels + sorted dedupe) must
+    maintain the exact same forest as the flat recompute engine, and only
+    engage past the live-edge threshold."""
+    from repro.coarsen import CoarsenConfig
+    from repro.launch.serve_graph import undirected_edges
+
+    n = 1 << 11
+    g = rmat_graph(11, 4, seed=9)
+    lo, hi, w = undirected_edges(g)
+    B = 512
+    flat_eng = StreamingMSF(n, batch_capacity=B)
+    # cutoff below n so the rebuild actually contracts (the default 2048
+    # cutoff at n = 2048 would silently degenerate to the flat solve)
+    co_eng = StreamingMSF(
+        n, batch_capacity=B, coarsen=CoarsenConfig(cutoff=256),
+        coarsen_threshold=1024,
+    )
+    for k in range(len(lo) // B):
+        sl = slice(k * B, (k + 1) * B)
+        flat_eng.insert_batch(lo[sl], hi[sl], w[sl])
+        co_eng.insert_batch(lo[sl], hi[sl], w[sl])
+    # the rebuild must have run real contraction levels, not the
+    # zero-level degenerate form
+    assert co_eng.last_coarsen_stats is not None
+    assert len(co_eng.last_coarsen_stats.levels) >= 1
+    assert abs(flat_eng.weight - co_eng.weight) < 1e-3
+    f1 = sorted(zip(*[a.tolist() for a in flat_eng.forest_edges()[:2]]))
+    f2 = sorted(zip(*[a.tolist() for a in co_eng.forest_edges()[:2]]))
+    assert f1 == f2
+    s1, s2 = flat_eng.snapshots.acquire(), co_eng.snapshots.acquire()
+    assert s1.n_components == s2.n_components
+    # deletions + compaction still work through the coarsen rebuild
+    l0, h0, _, _ = co_eng.forest_edges()
+    co_eng.delete_batch(l0[:50], h0[:50])
+    co_eng.compact()
+    assert co_eng.snapshots.acquire().n_components >= s2.n_components
+
+
+def test_stream_coarsen_below_threshold_stays_flat():
+    """With a huge threshold the coarsen engine must behave exactly like
+    the flat one (the flat branch is taken every update)."""
+    from repro.coarsen import CoarsenConfig
+
+    n = 256
+    eng = StreamingMSF(n, batch_capacity=32,
+                       coarsen=CoarsenConfig(cutoff=32),
+                       coarsen_threshold=1 << 20)
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        u = rng.integers(0, n, 32)
+        v = rng.integers(0, n, 32)
+        eng.insert_batch(u, v, rng.integers(1, 100, 32).astype(float))
+    assert eng.last_coarsen_stats is None  # flat branch taken every time
+    ref_eng = StreamingMSF(n, batch_capacity=32)
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        u = rng.integers(0, n, 32)
+        v = rng.integers(0, n, 32)
+        ref_eng.insert_batch(u, v, rng.integers(1, 100, 32).astype(float))
+    assert abs(eng.weight - ref_eng.weight) < 1e-9
