@@ -10,10 +10,21 @@ pipeline (``CoarsenConfig(fused=True)``) against the PR-2 host-round-trip
 level path over the same graphs, with ``speedup_vs_host_levels`` as the
 headline derived metric.
 
+``--dist`` adds ``dist_fused_*`` rows: the in-mesh fused level pipeline
+(``msf_distributed(part, mesh, coarsen=...)``, dedupe pinned to
+"device" so the measured path is the zero-round-trip one on every
+backend) against the PR-2 host-prelude pipeline
+(``precontract_partition`` + Fig-2 solve + ``merge_distributed``) on the
+largest 2D mesh the available devices support. The derived fields carry
+``host_repartitions`` — 0 for the in-mesh path vs L (one per level) for
+the prelude baseline, the acceptance metric of the distributed fused
+levels.
+
 ``--smoke`` runs one tiny rmat and *asserts* flat/coarsen parity (weight
 and edge set) — the CI kernel-regression tripwire: a broken contraction
 or dedupe kernel fails the step, not just a slower benchmark. With
-``--fused`` the fused pipeline parity is asserted too.
+``--fused`` the fused pipeline parity is asserted too; with ``--dist``
+both distributed pipelines' parity and the zero-round-trip stat.
 
 ``--json PATH`` writes the rows as a BENCH trajectory point (CI artifact).
 """
@@ -137,13 +148,82 @@ def _bench_fused(name: str, g, cfg: CoarsenConfig, check: bool = False):
     ]
 
 
-def run_rows(smoke: bool = False, fused: bool = False):
+def _dist_mesh():
+    """Largest 2D mesh the available devices support (conftest's policy)."""
+    import jax
+
+    from repro.compat import make_mesh
+
+    n = jax.device_count()
+    shape = (2, 4) if n >= 8 else (2, 2) if n >= 4 else (1, 2) if n >= 2 else (1, 1)
+    return make_mesh(shape, ("data", "model")), shape
+
+
+def _bench_dist(name: str, g, cfg: CoarsenConfig, check: bool = False):
+    """In-mesh fused levels (zero per-level host re-partitions) vs the PR-2
+    host-prelude pipeline (L round-trips + one residual re-partition)."""
+    from repro.coarsen import merge_distributed, precontract_partition
+    from repro.core.msf_dist import msf_distributed
+    from repro.graphs.partition import partition_edges_2d
+
+    mesh, (rows, cols) = _dist_mesh()
+    part0 = partition_edges_2d(g, rows, cols)
+    cfg_mesh = dataclasses.replace(cfg, fused=True, dedupe="device")
+    drv = msf_distributed(part0, mesh, coarsen=cfg_mesh)
+
+    def run_inmesh():
+        return drv(part0.src_row, part0.dst_col, part0.w, part0.eid, part0.valid)
+
+    cfg_host = dataclasses.replace(cfg, fused=False, dedupe="host")
+    # Build the residual driver once: the prelude is deterministic, so the
+    # per-iteration re-partition hits the same shapes/executable.
+    part_r, prelude = precontract_partition(g, rows, cols, config=cfg_host)
+    drv2 = msf_distributed(part_r, mesh, shortcut="csp", capacity=4096)
+
+    def run_prelude():
+        p, pre = precontract_partition(g, rows, cols, config=cfg_host)
+        r = drv2(p.src_row, p.dst_col, p.w, p.eid, p.valid)
+        return merge_distributed(pre, r)
+
+    if check:
+        flat_r = msf(g)
+        _assert_parity(flat_r, run_inmesh(), f"dist_fused_{name}")
+        st0 = drv.last_stats
+        assert st0.host_roundtrips == 0, "in-mesh path round-tripped"
+        assert len(st0.levels) >= 1, "in-mesh contraction never ran"
+        _assert_parity(flat_r, run_prelude(), f"dist_prelude_{name}")
+    t_mesh = timeit(run_inmesh, iters=3)
+    t_pre = timeit(run_prelude, iters=3)
+    st = drv.last_stats
+    return [
+        row(
+            f"dist_fused_{name}",
+            t_mesh * 1e6,
+            f"speedup_vs_prelude={t_pre / t_mesh:.2f}x;"
+            f"host_repartitions=0;levels={len(st.levels)};"
+            f"residual_n={st.residual_n};residual_iters={st.residual_iters};"
+            f"mesh={rows}x{cols}",
+        ),
+        row(
+            f"dist_prelude_{name}",
+            t_pre * 1e6,
+            f"host_repartitions={len(prelude.stats.levels)};"
+            f"mesh={rows}x{cols}",
+        ),
+    ]
+
+
+def run_rows(smoke: bool = False, fused: bool = False, dist: bool = False):
     if smoke:
         g = rmat_graph(SMOKE_SCALE, 4, seed=9)
         cfg = CoarsenConfig(rounds_per_level=2, cutoff=32)
         out = _bench_graph(f"rmat_s{SMOKE_SCALE}_e4_smoke", g, cfg, check=True)
         if fused:
             out += _bench_fused(
+                f"rmat_s{SMOKE_SCALE}_e4_smoke", g, cfg, check=True
+            )
+        if dist:
+            out += _bench_dist(
                 f"rmat_s{SMOKE_SCALE}_e4_smoke", g, cfg, check=True
             )
         return out
@@ -154,11 +234,15 @@ def run_rows(smoke: bool = False, fused: bool = False):
         out += _bench_graph(f"rmat_s{scale}_e{EDGE_FACTOR}", g, cfg)
         if fused:
             out += _bench_fused(f"rmat_s{scale}_e{EDGE_FACTOR}", g, cfg)
+        if dist:
+            out += _bench_dist(f"rmat_s{scale}_e{EDGE_FACTOR}", g, cfg)
     g = grid_road_graph(128, 128, seed=2)
     cfg = CoarsenConfig(rounds_per_level=2, cutoff=1024)
     out += _bench_graph("grid_128x128", g, cfg)
     if fused:
         out += _bench_fused("grid_128x128", g, cfg)
+    if dist:
+        out += _bench_dist("grid_128x128", g, cfg)
     g = components_graph(64, 256, seed=5)
     out += _bench_graph(
         "components_64x256", g, CoarsenConfig(rounds_per_level=2, cutoff=1024)
@@ -170,7 +254,10 @@ if __name__ == "__main__":
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
     fused = "--fused" in argv
-    emit(run_rows(smoke=smoke, fused=fused), argv)
+    dist = "--dist" in argv
+    emit(run_rows(smoke=smoke, fused=fused, dist=dist), argv)
     if smoke:
-        tag = " (+fused)" if fused else ""
+        tag = "".join(
+            t for t, on in ((" (+fused)", fused), (" (+dist)", dist)) if on
+        )
         print(f"# coarsen smoke: flat/coarsen parity OK{tag}", file=sys.stderr)

@@ -18,6 +18,7 @@ from repro.coarsen.engine import (
     precontract_partition,
     run_levels,
 )
+from repro.coarsen.dist import DistCoarsenMSF, DistCoarsenStats
 from repro.coarsen.filter import (
     FilterResult,
     filter_level,

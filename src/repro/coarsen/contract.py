@@ -36,9 +36,14 @@ class ContractResult(NamedTuple):
     n_msf_edges: jax.Array  # int32 scalar
 
 
-def _contract_rounds(reduce_fn, n: int, rounds: int) -> ContractResult:
+def contract_rounds(reduce_fn, n: int, rounds: int) -> ContractResult:
     """Shared K-round hook+shortcut driver; ``reduce_fn(p)`` yields the
-    per-root MINWEIGHT EdgeMin for the current parent vector."""
+    per-root MINWEIGHT EdgeMin for the current parent vector.
+
+    Public: the distributed fused level (``repro.coarsen.dist``) runs the
+    same rounds inside ``shard_map`` with a cross-device reduce_fn — all
+    the per-round bookkeeping (hook, tie-break, eid recording, shortcut,
+    rank/relabel) operates on replicated dense vectors and is shared."""
     p = jnp.arange(n, dtype=jnp.int32)
     total = jnp.float32(0.0)
     msf_eids = jnp.full((n,), IMAX, jnp.int32)
@@ -87,7 +92,7 @@ def contract_level(
     else:
         def reduce_fn(p):
             return min_outgoing_coo(p, src, dst, w, eid, valid, n, segment="root")
-    return _contract_rounds(reduce_fn, n, rounds)
+    return contract_rounds(reduce_fn, n, rounds)
 
 
 @partial(
@@ -127,19 +132,56 @@ def contract_level_und(
     eid < eid_capacity for every valid edge (the engine passes the padded
     original edge capacity).
     """
+    reduce_fn = make_und_reduce(
+        lo, hi, w, eid, valid,
+        n=n, eid_capacity=eid_capacity, pack=pack, segmin=segmin,
+    )
+    return contract_rounds(reduce_fn, n, rounds)
+
+
+def make_und_reduce(
+    lo: jax.Array,
+    hi: jax.Array,
+    w: jax.Array,
+    eid: jax.Array,
+    valid: jax.Array,
+    *,
+    n: int,
+    eid_capacity: int,
+    pack: bool = False,
+    segmin=None,
+    combine=None,
+):
+    """Build ``reduce_fn(p) → EdgeMin`` over the undirected canonical arrays.
+
+    ``combine`` is applied to every dense [n] partial *before* winner
+    selection: identity (``None``) for the single-shard engine, the
+    cross-device all-reduce(min) over the mesh axes for the distributed
+    fused level — the MINWEIGHT ⊕-combine of DESIGN.md §2, where each pass
+    is one masked min-reduction. With a combine the arrays may be one
+    device's *shard* of the edge set: the per-root minimum is the global
+    one after the combine, winner masks only fire on shards that hold the
+    winning edge, and the payload lookup is masked by locality (the
+    eid→position table marks absent eids with −1) so remote shards
+    contribute the identity.
+    """
     from repro.core.semiring import EdgeMin, INF, PACK_IDENTITY, pack32, unpack32
 
+    if combine is None:
+        combine = lambda x: x  # noqa: E731 — identity for the local engine
     e = lo.shape[0]
-    pos_of_eid = jnp.zeros(eid_capacity, jnp.int32).at[
+    pos_of_eid = jnp.full((eid_capacity,), -1, jnp.int32).at[
         jnp.where(valid, eid, eid_capacity)
     ].set(jnp.arange(e, dtype=jnp.int32), mode="drop")
     i_n = jnp.arange(n, dtype=jnp.int32)
 
     def payload_from_eid(p, mineid, empty):
         pos = pos_of_eid[jnp.clip(mineid, 0, eid_capacity - 1)]
-        plo, phi = p[lo[pos]], p[hi[pos]]
+        local = (pos >= 0) & ~empty  # this shard holds the winning edge
+        safe = jnp.clip(pos, 0, max(e - 1, 0))
+        plo, phi = p[lo[safe]], p[hi[safe]]
         pd = jnp.where(plo == i_n, phi, plo)
-        return jnp.where(empty, IMAX, pd)
+        return combine(jnp.where(local, pd, IMAX))
 
     if pack:
         def reduce_fn(p):
@@ -154,7 +196,7 @@ def contract_level_und(
             else:
                 m1 = segmin(key, plo, n)
                 m2 = segmin(key, phi, n)
-            minkey = jnp.minimum(m1, m2)
+            minkey = combine(jnp.minimum(m1, m2))
             w_out, eid_out = unpack32(minkey)
             empty = minkey == PACK_IDENTITY
             return EdgeMin(
@@ -167,24 +209,24 @@ def contract_level_und(
             plo, phi = p[lo], p[hi]
             out = (plo != phi) & valid
             wm = jnp.where(out, w, INF)
-            minw = jnp.minimum(
+            minw = combine(jnp.minimum(
                 jax.ops.segment_min(wm, plo, num_segments=n),
                 jax.ops.segment_min(wm, phi, num_segments=n),
-            )
+            ))
             on1 = out & (wm == minw[plo])
             on2 = out & (wm == minw[phi])
-            mineid = jnp.minimum(
+            mineid = combine(jnp.minimum(
                 jax.ops.segment_min(
                     jnp.where(on1, eid, IMAX), plo, num_segments=n
                 ),
                 jax.ops.segment_min(
                     jnp.where(on2, eid, IMAX), phi, num_segments=n
                 ),
-            )
+            ))
             empty = minw == INF
             return EdgeMin(
                 w=minw,
                 eid=mineid,
                 payload=(payload_from_eid(p, mineid, empty),),
             )
-    return _contract_rounds(reduce_fn, n, rounds)
+    return reduce_fn

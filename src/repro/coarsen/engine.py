@@ -104,6 +104,11 @@ class CoarsenPrelude(NamedTuple):
     label_map: np.ndarray  # int32 [n0]: original vertex → residual vertex id
     residual: Graph  # canonical symmetric residual graph
     stats: CoarsenStats
+    # hook+shortcut rounds the levels actually ran (levels × rounds_per_level)
+    # — threaded so finalizers report true iteration counts instead of
+    # re-deriving them from a config they may not see (merge_distributed
+    # used to hard-code 1 round per level and under-report).
+    level_iters: int = 0
 
 
 def _next_pow2(k: int) -> int:
@@ -158,28 +163,21 @@ def _resolve_segmins(cfg: CoarsenConfig, use_pack: bool):
     The hook reduction (``contract_level``) sees *unsorted* segment ids
     (roots of the current parent vector), so "sorted" degrades to "auto"
     there. The dedupe's ids are the boundary prefix-sum over sorted pair
-    keys, so a Pallas request ("pallas"/"sorted") selects the
-    contiguous-range sorted kernel — the flat kernel's full rescan is
-    O(E²/block_rows) at num_segments = E and was never viable here.
+    keys — resolution lives in ``kernels.ops.dedupe_segmin_backend``
+    (shared with the distributed fused level).
     """
     if not use_pack:
         return None, None
-    from repro.kernels.ops import flat_segmin_backend, make_packed_segmin
+    from repro.kernels.ops import (
+        dedupe_segmin_backend,
+        flat_segmin_backend,
+        make_packed_segmin,
+    )
 
     hook = None
     if cfg.segmin not in (None, "jnp"):
         hook = make_packed_segmin(flat_segmin_backend(cfg.segmin))
-    if cfg.segmin in ("pallas", "sorted"):
-        dedupe = make_packed_segmin("sorted")
-    elif cfg.segmin == "jnp":
-        dedupe = None
-    else:  # None / "auto": sorted Pallas on TPU, XLA segment_min elsewhere
-        dedupe = (
-            make_packed_segmin("sorted")
-            if jax.default_backend() == "tpu"
-            else None
-        )
-    return hook, dedupe
+    return hook, dedupe_segmin_backend(cfg.segmin)
 
 
 class FusedLevel(NamedTuple):
@@ -335,6 +333,7 @@ def _run_levels_fused(
         residual=residual,
         stats=CoarsenStats(levels=tuple(stats), residual_n=n_cur,
                            residual_m=m_cur),
+        level_iters=len(stats) * cfg.rounds_per_level,
     )
 
 
@@ -430,6 +429,7 @@ def run_levels(graph: Graph, config: CoarsenConfig | None = None) -> CoarsenPrel
         residual=residual,
         stats=CoarsenStats(levels=tuple(stats), residual_n=n_cur,
                            residual_m=m_cur),
+        level_iters=len(stats) * cfg.rounds_per_level,
     )
 
 
@@ -440,26 +440,21 @@ def _finalize(
     residual_weight: float,
     residual_iters: int,
     n0: int,
-    rounds_per_level: int,
 ) -> MSFResult:
     """Merge level picks with the residual solve into one MSFResult in
     original-graph vertex/edge ids."""
+    from repro.coarsen.relabel import canonical_minvertex_labels
+
     all_eids = np.concatenate([prelude.msf_eids, residual_eids])
     msf_eids = np.full(n0, _IMAX, np.int32)
     msf_eids[: len(all_eids)] = all_eids
     comp = residual_parent[prelude.label_map]  # [n0] residual-space labels
-    # Canonical original-vertex labels: min original vertex per component.
-    reps = np.full(len(residual_parent), n0, np.int64)
-    np.minimum.at(reps, comp, np.arange(n0))
-    parent = reps[comp].astype(np.int32)
     return MSFResult(
         weight=np.float32(prelude.weight + residual_weight),
-        parent=parent,
+        parent=canonical_minvertex_labels(comp, len(residual_parent)),
         msf_eids=msf_eids,
         n_msf_edges=np.int32(len(all_eids)),
-        iterations=np.int32(
-            len(prelude.stats.levels) * rounds_per_level + residual_iters
-        ),
+        iterations=np.int32(prelude.level_iters + residual_iters),
     )
 
 
@@ -501,7 +496,6 @@ class CoarsenMSF:
             float(r.weight),
             int(r.iterations),
             graph.n,
-            self.config.rounds_per_level,
         )
 
 
@@ -538,7 +532,7 @@ def precontract_partition(
     *,
     config: CoarsenConfig | None = None,
 ) -> Tuple[Partition2D, CoarsenPrelude]:
-    """Coarsen first, then 2D-partition only the residual graph.
+    """Coarsen on the host first, then 2D-partition only the residual.
 
     The paper's Fig-2 schedule pays all_gathers proportional to n and
     local work proportional to the device's edge block — both shrink with
@@ -546,6 +540,13 @@ def precontract_partition(
     whose n/m the levels already cut geometrically. Use
     :func:`merge_distributed` to fold the ``msf_distributed`` result back
     into original-graph ids.
+
+    This is the **host-prelude** pipeline (every level round-trips edge
+    arrays off-device); the production distributed path is
+    ``msf_distributed(part_of_original_graph, mesh, coarsen=config)``,
+    which runs the same levels inside ``shard_map`` with zero per-level
+    host re-partitions (``repro.coarsen.dist``, DESIGN.md §8) and keeps
+    this pipeline as its measured baseline.
     """
     prelude = run_levels(graph, config)
     part = partition_edges_2d(prelude.residual, rows, cols)
@@ -553,8 +554,13 @@ def precontract_partition(
 
 
 def merge_distributed(prelude: CoarsenPrelude, dist_result) -> MSFResult:
-    """Combine a ``DistMSFResult`` over the residual with the prelude."""
-    cfg_rounds = 1  # iterations bookkeeping only; levels already counted
+    """Combine a ``DistMSFResult`` over the residual with the prelude.
+
+    ``iterations`` adds the rounds the levels actually ran
+    (``prelude.level_iters``) to the distributed solve's count — it used
+    to hard-code one round per level and under-report whenever
+    ``rounds_per_level > 1``.
+    """
     return _finalize(
         prelude,
         np.asarray(dist_result.parent),
@@ -562,5 +568,4 @@ def merge_distributed(prelude: CoarsenPrelude, dist_result) -> MSFResult:
         float(dist_result.weight),
         int(dist_result.iterations),
         len(prelude.label_map),
-        cfg_rounds,
     )

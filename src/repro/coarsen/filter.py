@@ -77,7 +77,32 @@ def filter_level(
     pack: bool = False,
     segmin=None,
 ) -> FilterResult:
+    """Jitted wrapper around :func:`filter_level_impl` (same contract)."""
+    return filter_level_impl(
+        und_lo, und_hi, w, eid, valid, new_ids, n=n, pack=pack, segmin=segmin
+    )
+
+
+def filter_level_impl(
+    und_lo: jax.Array,
+    und_hi: jax.Array,
+    w: jax.Array,
+    eid: jax.Array,
+    valid: jax.Array,
+    new_ids: jax.Array,
+    *,
+    n: int,
+    pack: bool = False,
+    segmin=None,
+) -> FilterResult:
     """Relabel into supervertex space, drop self-loops, dedupe parallels.
+
+    Unjitted trace body — the distributed fused level calls this directly
+    *inside* ``shard_map`` on its local [Emax] edge block (each device
+    sort-dedupes its own block; cross-device parallels survive, which is
+    exact — they are non-minimal on a cycle and the hook reduction's
+    cross-device combine never picks them while the lighter copy lives).
+    Standalone callers use the jitted :func:`filter_level`.
 
     Takes the *undirected* canonical arrays (one entry per edge, not the
     symmetric directed form) — both directions relabel to the same

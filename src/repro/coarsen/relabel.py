@@ -43,3 +43,21 @@ def compose_labels(label_map: jax.Array, new_ids: jax.Array) -> jax.Array:
     (new_ids[v] = rank of v's root), so composition is a single gather.
     """
     return new_ids[label_map]
+
+
+def canonical_minvertex_labels(comp, comp_space: int):
+    """Host-side canonical component labels: each original vertex gets the
+    *minimum original vertex* of its component.
+
+    ``comp`` is an int [n0] numpy array of component ids (any id space of
+    size ``comp_space``, e.g. residual-solve root ids gathered through the
+    level ``label_map``). Shared by the coarsening finalizer and the
+    distributed fused engine so both report identical ``parent`` vectors.
+    """
+    import numpy as np
+
+    comp = np.asarray(comp)
+    n0 = len(comp)
+    reps = np.full(comp_space, n0, np.int64)
+    np.minimum.at(reps, comp, np.arange(n0))
+    return reps[comp].astype(np.int32)

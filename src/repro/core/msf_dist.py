@@ -108,13 +108,34 @@ def msf_distributed(
     capacity: int = 1 << 16,
     max_iters: int | None = None,
     pack: bool = False,
+    coarsen=None,
 ):
     """Returns a jitted function (src_row, dst_col, w, eid, valid, p0) →
     DistMSFResult, plus ready-to-pass input arrays from ``part``.
 
     Shapes: edges [R, C, Emax] sharded over (row_axis, col_axis); parent
     vector [n_pad] sharded over the flattened mesh.
+
+    ``coarsen``: ``None`` for the flat Fig-2 solve above, or a
+    ``repro.coarsen.CoarsenConfig`` (``True`` for defaults) to run
+    Borůvka contract-and-filter levels **inside the mesh** first
+    (DESIGN.md §8) — ``part`` must then partition the *original* graph,
+    and the returned driver (a ``repro.coarsen.dist.DistCoarsenMSF``,
+    same call signature, per-run ``last_stats``) yields an ``MSFResult``
+    in original-graph ids. The levels keep the parent vector replicated
+    (n shrinks geometrically), so ``shortcut``/``capacity`` do not apply
+    there and are ignored; ``pack`` is governed by the config
+    (auto-detected when ``config.pack`` is None).
     """
+    if coarsen is not None and coarsen is not False:
+        from repro.coarsen.dist import DistCoarsenMSF  # lazy: avoid cycle
+        from repro.coarsen.engine import CoarsenConfig
+
+        config = CoarsenConfig() if coarsen is True else coarsen
+        return DistCoarsenMSF(
+            part, mesh, config,
+            row_axis=row_axis, col_axis=col_axis, max_iters=max_iters,
+        )
     n_pad = part.n_pad
     capacity = min(capacity, n_pad)
     limit = jnp.int32(

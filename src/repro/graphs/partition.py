@@ -101,6 +101,36 @@ def partition_edges_2d(graph: Graph, rows: int, cols: int) -> Partition2D:
     )
 
 
+def block_global_ids(src_row, dst_col, shard_size: int):
+    """Recover **global** vertex ids from a :class:`Partition2D`'s local
+    offsets — [R, C, Emax] arrays in, int32 [R, C, Emax] arrays out.
+
+    Inverse of the layout in the module docstring: row block r is the
+    contiguous range [r*C*S, (r+1)*C*S), so a row offset o decodes as
+    ``r*C*S + o``; column block s is the strided shard set {k : k % C == s},
+    so a column offset o sits in shard ``(o // S)*C + s`` at element
+    ``o % S``. The distributed fused coarsening levels key edges globally
+    (the per-level relabeling breaks the (row_of, col_of) block alignment,
+    so the Fig-2 row/col-block gathers stop applying after level 0) — this
+    is the one-time re-keying at level entry. Works on numpy and jax
+    arrays alike (elementwise arithmetic + broadcasting only).
+    """
+    xp = np
+    if not isinstance(src_row, np.ndarray):
+        import jax.numpy as jnp
+
+        xp = jnp
+    rows, cols = src_row.shape[0], src_row.shape[1]
+    r = xp.arange(rows, dtype=xp.int32)[:, None, None]
+    s = xp.arange(cols, dtype=xp.int32)[None, :, None]
+    src_g = r * (cols * shard_size) + src_row.astype(xp.int32)
+    dst_g = (
+        (dst_col.astype(xp.int32) // shard_size * cols + s) * shard_size
+        + dst_col.astype(xp.int32) % shard_size
+    )
+    return src_g, dst_g
+
+
 def partition_edges_1d(graph: Graph, parts: int) -> dict:
     """1D (flat) edge partition — the simpler distribution used by the GNN
     full-graph path and as an MSF ablation."""

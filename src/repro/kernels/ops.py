@@ -149,6 +149,30 @@ def segment_min_sorted(
     return out[:num_segments]
 
 
+def dedupe_segmin_backend(backend: str | None):
+    """Resolve a segmin request for a *dedupe* site — one whose segment ids
+    are sorted (the boundary prefix-sum over sorted pair keys in the
+    coarsening filter, single-device and distributed alike).
+
+    Returns the packed-segmin callable to pass to the filter, or ``None``
+    for the plain XLA ``segment_min``: a Pallas request ("pallas"/"sorted")
+    selects the contiguous-range sorted kernel (the flat kernel's full
+    rescan is O(E²/block_rows) at num_segments = E and was never viable
+    here); "jnp" pins XLA; None/"auto" picks the sorted kernel on TPU and
+    XLA elsewhere (interpreted Pallas loses badly to XLA on CPU). The
+    single home of that rule — call sites must not re-implement it.
+    """
+    if backend in ("pallas", "sorted"):
+        return make_packed_segmin("sorted")
+    if backend == "jnp":
+        return None
+    return (
+        make_packed_segmin("sorted")
+        if jax.default_backend() == "tpu"
+        else None
+    )
+
+
 def flat_segmin_backend(backend: str | None) -> str | None:
     """Resolve a segmin backend request for a *flat* reduction site —
     one whose segment ids are unsorted (the MSF hook loops, the residual

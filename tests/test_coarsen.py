@@ -382,6 +382,30 @@ def test_contract_level_und_matches_directed():
 # ---------------------------------------------------------------------------
 
 
+def test_merge_distributed_iterations_bookkeeping(dist_mesh, dist_mesh_shape):
+    """Regression (this PR): ``merge_distributed`` hard-coded one round per
+    level, so ``MSFResult.iterations`` under-reported whenever
+    rounds_per_level > 1. The real count now rides on
+    ``CoarsenPrelude.level_iters``."""
+    from repro.core.msf_dist import msf_distributed
+
+    rows, cols = dist_mesh_shape
+    g = random_graph(300, 1000, seed=29)
+    cfg = CoarsenConfig(rounds_per_level=2, cutoff=16)
+    part, prelude = precontract_partition(g, rows, cols, config=cfg)
+    n_levels = len(prelude.stats.levels)
+    assert n_levels >= 1
+    assert prelude.level_iters == 2 * n_levels
+    drv = msf_distributed(part, dist_mesh, shortcut="csp", capacity=512)
+    dist = drv(part.src_row, part.dst_col, part.w, part.eid, part.valid)
+    merged = merge_distributed(prelude, dist)
+    assert int(merged.iterations) == 2 * n_levels + int(dist.iterations)
+    # the host engine reports the same arithmetic for the same config
+    eng = CoarsenMSF(cfg)
+    eng(g)
+    assert len(eng.last_stats.levels) == n_levels
+
+
 def test_precontract_partition_merge(dist_mesh, dist_mesh_shape):
     from repro.core.msf_dist import msf_distributed
 

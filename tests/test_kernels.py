@@ -238,6 +238,75 @@ def test_segment_min_sorted_random_sweep():
         _sorted_case(e, n_seg, seg)
 
 
+def test_segment_min_sorted_straddle_three_plus_blocks():
+    """Satellite: single segments spanning ≥ 3 full 512-lane edge blocks
+    (with ordinary neighbors on both sides) — the per-row-block
+    block-range walk must min-accumulate across every straddled block."""
+    be = 512
+    for span in (3 * be + 1, 4 * be, 5 * be + 137):
+        e = span + 300
+        seg = np.concatenate(
+            [np.zeros(150), np.full(span, 1), np.full(e - span - 150, 2)]
+        ).astype(np.int32)
+        _sorted_case(e, 64, seg)
+
+
+def test_segment_min_sorted_all_empty_row_blocks():
+    """Row blocks with zero segments before, between, and after the
+    occupied band — all must first-touch-init to the identity."""
+    rng = np.random.default_rng(17)
+    e = 400
+    # band confined to segments [520, 560): row blocks 0-3 and 5+ empty
+    seg = np.sort(rng.integers(520, 560, e)).astype(np.int32)
+    _sorted_case(e, 2048, seg)
+    # two disjoint bands with an empty gap of whole row blocks between
+    seg = np.sort(
+        np.concatenate(
+            [rng.integers(0, 8, 200), rng.integers(1500, 1530, 200)]
+        )
+    ).astype(np.int32)
+    _sorted_case(400, 2048, seg)
+
+
+def test_segment_min_sorted_max_lane_tails():
+    """Edge counts at the padding extremes: exactly full blocks (no pad),
+    one short of a block (511 pad lanes), one past a block (e_pad − e =
+    block − 1) — and segment counts at the sublane-tile boundaries."""
+    rng = np.random.default_rng(19)
+    for e in (512, 1024, 511, 513, 1023, 1025):
+        for n_seg in (127, 128, 129):
+            seg = np.sort(rng.integers(0, n_seg, e)).astype(np.int32)
+            _sorted_case(e, n_seg, seg)
+
+
+def test_segment_min_sorted_fuzz_adversarial():
+    """Fuzz cross-check against the oracle on randomized adversarial
+    layouts: run-length constructed segment ids mixing singleton runs,
+    multi-block giants, and empty-band jumps, at random non-aligned edge
+    and segment counts."""
+    rng = np.random.default_rng(2024)
+    for _ in range(12):
+        n_seg = int(rng.integers(1, 1400))
+        runs, cur, total = [], 0, 0
+        while total < int(rng.integers(200, 1800)) and cur < n_seg:
+            kind = rng.random()
+            if kind < 0.15:  # giant run straddling blocks
+                ln = int(rng.integers(512, 1300))
+            elif kind < 0.5:  # singleton
+                ln = 1
+            else:
+                ln = int(rng.integers(1, 40))
+            runs.append(np.full(ln, cur, np.int32))
+            total += ln
+            # occasional jump leaves whole row blocks empty
+            cur += int(rng.integers(1, 300)) if rng.random() < 0.2 else int(
+                rng.integers(1, 4)
+            )
+        seg = np.concatenate(runs) if runs else np.zeros(0, np.int32)
+        seg = np.minimum(seg, n_seg - 1)
+        _sorted_case(len(seg), n_seg, seg)
+
+
 def test_segment_min_sorted_backend_resolution():
     """make_packed_segmin('sorted') routes through the sorted kernel and is
     cached (same callable per backend — jit-static identity)."""

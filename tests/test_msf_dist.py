@@ -1,14 +1,18 @@
 """Distributed MSF engine: 1-device mesh parity + real 8-device subprocess
-runs of the paper's Fig-2 schedule (all shortcut strategies)."""
+runs of the paper's Fig-2 schedule (all shortcut strategies), plus the
+distributed fused coarsening levels (``msf_distributed(coarsen=...)``)."""
 import subprocess
 import sys
 
 import jax
+import numpy as np
 import pytest
 
+from repro.coarsen import CoarsenConfig
+from repro.core.msf import msf
 from repro.core.msf_dist import msf_distributed
 from repro.graphs import grid_road_graph, random_graph
-from repro.graphs.partition import partition_edges_2d
+from repro.graphs.partition import block_global_ids, partition_edges_2d
 from repro.graphs.structures import nx_free_msf_weight
 
 
@@ -55,6 +59,89 @@ def test_os_policy_overflow_fallback_high_diameter(dist_mesh, dist_mesh_shape):
     assert abs(float(r.weight) - nx_free_msf_weight(g)) < 1e-3
 
 
+# ---------------------------------------------------------------------------
+# distributed fused coarsening levels (repro.coarsen.dist, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _eids(r):
+    return set(np.asarray(r.msf_eids)[: int(r.n_msf_edges)].tolist())
+
+
+def test_block_global_ids_inverts_partition(dist_mesh_shape):
+    """Global-id recovery from the 2D block offsets reproduces the valid
+    edge multiset exactly — the level-0 re-keying of the fused path."""
+    rows, cols = dist_mesh_shape
+    g = random_graph(150, 500, seed=3)
+    part = partition_edges_2d(g, rows, cols)
+    sg, dg = block_global_ids(part.src_row, part.dst_col, part.shard_size)
+    got = sorted(zip(sg[part.valid].tolist(), dg[part.valid].tolist()))
+    valid = np.asarray(g.valid)
+    want = sorted(
+        zip(np.asarray(g.src)[valid].tolist(), np.asarray(g.dst)[valid].tolist())
+    )
+    assert got == want
+
+
+@pytest.mark.parametrize("dedupe", ["device", "host"])
+def test_distributed_fused_coarsen_parity(dist_mesh, dist_mesh_shape, dedupe):
+    """Acceptance: the in-mesh fused levels return the identical MSF (weight,
+    global-eid edge set, canonical parent labels) as the host fused engine
+    and the flat solver — with zero per-level host round-trips on the
+    device-dedupe path, L on the explicit host fallback."""
+    rows, cols = dist_mesh_shape
+    g = random_graph(300, 1000, seed=29)
+    part = partition_edges_2d(g, rows, cols)
+    cfg = CoarsenConfig(rounds_per_level=2, cutoff=16, fused=True, dedupe=dedupe)
+    drv = msf_distributed(part, dist_mesh, coarsen=cfg)
+    r = drv(part.src_row, part.dst_col, part.w, part.eid, part.valid)
+    flat = msf(g)
+    host = msf(g, coarsen=CoarsenConfig(rounds_per_level=2, cutoff=16), fused=True)
+    assert _eids(r) == _eids(flat) == _eids(host)
+    assert abs(float(r.weight) - nx_free_msf_weight(g)) < 1e-3
+    np.testing.assert_array_equal(np.asarray(r.parent), np.asarray(host.parent))
+    st = drv.last_stats
+    assert len(st.levels) >= 1  # contraction actually ran in-mesh
+    expected = 0 if dedupe == "device" else len(st.levels)
+    assert st.host_roundtrips == expected
+    assert int(r.iterations) == 2 * len(st.levels) + st.residual_iters
+
+
+def test_distributed_fused_float_path(dist_mesh, dist_mesh_shape):
+    """Non-integral weights force the 3-pass float MINWEIGHT combine across
+    the mesh (no pack32) — same MSF as the flat solver."""
+    from repro.graphs.structures import from_edges
+
+    rows, cols = dist_mesh_shape
+    rng = np.random.default_rng(41)
+    n, m = 220, 700
+    g = from_edges(
+        rng.integers(0, n, m), rng.integers(0, n, m), rng.random(m) + 0.5, n
+    )
+    part = partition_edges_2d(g, rows, cols)
+    cfg = CoarsenConfig(rounds_per_level=2, cutoff=16, fused=True, dedupe="device")
+    drv = msf_distributed(part, dist_mesh, coarsen=cfg)
+    r = drv(part.src_row, part.dst_col, part.w, part.eid, part.valid)
+    flat = msf(g)
+    assert _eids(r) == _eids(flat)
+    assert abs(float(r.weight) - float(flat.weight)) < 1e-3
+
+
+def test_distributed_fused_below_cutoff_residual_only(dist_mesh, dist_mesh_shape):
+    """n ≤ cutoff: zero levels — the in-mesh residual rounds solve the whole
+    graph (the globally-keyed hook loop alone must be exact)."""
+    rows, cols = dist_mesh_shape
+    g = grid_road_graph(10, 12, seed=7)
+    part = partition_edges_2d(g, rows, cols)
+    drv = msf_distributed(
+        part, dist_mesh, coarsen=CoarsenConfig(cutoff=4096, fused=True)
+    )
+    r = drv(part.src_row, part.dst_col, part.w, part.eid, part.valid)
+    assert len(drv.last_stats.levels) == 0
+    assert _eids(r) == _eids(msf(g))
+    assert abs(float(r.weight) - nx_free_msf_weight(g)) < 1e-3
+
+
 _SUBPROCESS = r"""
 import jax
 from repro.core.msf_dist import msf_distributed
@@ -63,7 +150,10 @@ from repro.graphs.partition import partition_edges_2d
 from repro.graphs.structures import nx_free_msf_weight
 
 assert jax.device_count() == 8, jax.device_count()
+import numpy as np
+from repro.coarsen import CoarsenConfig
 from repro.compat import make_mesh
+from repro.core.msf import msf
 mesh = make_mesh((2, 4), ("data", "model"))
 for g in [random_graph(500, 1500, seed=1), grid_road_graph(20, 25, seed=2)]:
     part = partition_edges_2d(g, 2, 4)
@@ -71,6 +161,18 @@ for g in [random_graph(500, 1500, seed=1), grid_road_graph(20, 25, seed=2)]:
         drv = msf_distributed(part, mesh, shortcut=sc, capacity=4096)
         r = drv(part.src_row, part.dst_col, part.w, part.eid, part.valid)
         assert abs(float(r.weight) - nx_free_msf_weight(g)) < 1e-3, (sc, float(r.weight))
+    # distributed fused coarsening levels on the real 2x4 collective schedule
+    flat = msf(g)
+    eids = set(np.asarray(flat.msf_eids)[: int(flat.n_msf_edges)].tolist())
+    for dedupe in ["device", "host"]:
+        cfg = CoarsenConfig(rounds_per_level=2, cutoff=16, fused=True, dedupe=dedupe)
+        drv = msf_distributed(part, mesh, coarsen=cfg)
+        r = drv(part.src_row, part.dst_col, part.w, part.eid, part.valid)
+        assert abs(float(r.weight) - nx_free_msf_weight(g)) < 1e-3, (dedupe, float(r.weight))
+        got = set(np.asarray(r.msf_eids)[: int(r.n_msf_edges)].tolist())
+        assert got == eids, (dedupe, "eid set drift")
+        st = drv.last_stats
+        assert st.host_roundtrips == (0 if dedupe == "device" else len(st.levels))
 print("MSF_DIST_8DEV_OK")
 """
 

@@ -1,0 +1,229 @@
+"""Property-based parity suite: every MSF engine agrees on every graph.
+
+For hypothesis-drawn and fixed-seed random weighted graphs — including
+multigraphs (duplicate pairs with distinct eids), duplicate weights,
+isolated vertices, and fully-contracted inputs — assert that
+
+- flat ``msf``,
+- ``msf(coarsen=...)`` (host levels),
+- ``msf(coarsen=..., fused=True)`` (one-jit device levels), and
+- the distributed fused path (``msf_distributed(part, mesh, coarsen=...)``)
+
+all return the same forest weight and the same global-eid edge set, and
+that the chosen edges form a cycle-free spanning forest per component
+(union-find acyclicity + exactly n − #components edges), with component
+labelings that agree as partitions.
+
+Imports hypothesis through ``tests._hypothesis_stub``: without hypothesis
+the ``@given`` cases skip while the fixed-seed cases still run — CI keeps
+covering every engine on every graph family either way.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_stub import given, settings, st
+from repro.coarsen import CoarsenConfig
+from repro.core.msf import msf
+from repro.core.msf_dist import msf_distributed
+from repro.graphs.partition import partition_edges_2d
+from repro.graphs.structures import Graph, from_edges, nx_free_n_components
+
+_CFG = CoarsenConfig(rounds_per_level=2, cutoff=4)
+
+
+def _multigraph(u, v, w, n) -> Graph:
+    """Symmetric ``Graph`` KEEPING duplicate undirected pairs (distinct
+    eids) — the multigraph input ``from_edges`` would collapse; the level
+    dedupe has to do it instead. Self-loops are dropped (no engine ever
+    selects one: p[src] == p[dst] always)."""
+    u = np.asarray(u, np.int64)
+    v = np.asarray(v, np.int64)
+    w = np.asarray(w, np.float64)
+    keep = u != v
+    lo = np.minimum(u, v)[keep].astype(np.int32)
+    hi = np.maximum(u, v)[keep].astype(np.int32)
+    w = w[keep].astype(np.float32)
+    m = len(lo)
+    eid = np.arange(m, dtype=np.int32)
+    return Graph(
+        src=np.concatenate([lo, hi]),
+        dst=np.concatenate([hi, lo]),
+        w=np.concatenate([w, w]),
+        eid=np.concatenate([eid, eid]),
+        valid=np.ones(2 * m, bool),
+        n=int(n),
+    )
+
+
+def _eid_edges(g: Graph):
+    """eid → (lo, hi, w) for every valid undirected edge."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    eid = np.asarray(g.eid)
+    sel = np.asarray(g.valid) & (src < dst)
+    return {
+        int(e): (int(s), int(d), float(ww))
+        for s, d, ww, e in zip(src[sel], dst[sel], w[sel], eid[sel])
+    }
+
+
+def _eids(r):
+    return set(np.asarray(r.msf_eids)[: int(r.n_msf_edges)].tolist())
+
+
+def _same_partition(a, b):
+    fwd, bwd = {}, {}
+    for x, y in zip(np.asarray(a), np.asarray(b)):
+        if fwd.setdefault(int(x), int(y)) != int(y):
+            return False
+        if bwd.setdefault(int(y), int(x)) != int(x):
+            return False
+    return True
+
+
+def _assert_valid_forest(g: Graph, r, what: str):
+    """Chosen eids form a cycle-free spanning forest of every component."""
+    edges = _eid_edges(g)
+    chosen = sorted(_eids(r))
+    parent = list(range(g.n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    total = 0.0
+    for e in chosen:
+        assert e in edges, f"{what}: unknown eid {e}"
+        lo, hi, w = edges[e]
+        a, b = find(lo), find(hi)
+        assert a != b, f"{what}: eid {e} closes a cycle"
+        parent[a] = b
+        total += w
+    ncomp = nx_free_n_components(g)
+    assert len(chosen) == g.n - ncomp, f"{what}: not spanning"
+    assert abs(total - float(r.weight)) <= max(1e-3, 1e-6 * abs(total)), (
+        f"{what}: weight does not match its own edge set"
+    )
+    uf_labels = [find(v) for v in range(g.n)]
+    assert _same_partition(np.asarray(r.parent), np.asarray(uf_labels)), (
+        f"{what}: parent labels disagree with the chosen forest"
+    )
+
+
+def _check_all_engines(g: Graph, dist_mesh, dist_mesh_shape):
+    flat = msf(g)
+    results = {"flat": flat}
+    results["coarsen"] = msf(g, coarsen=_CFG)
+    results["fused"] = msf(g, coarsen=_CFG, fused=True)
+    rows, cols = dist_mesh_shape
+    part = partition_edges_2d(g, rows, cols)
+    cfg = CoarsenConfig(
+        rounds_per_level=2, cutoff=4, fused=True, dedupe="device"
+    )
+    drv = msf_distributed(part, dist_mesh, coarsen=cfg)
+    results["dist_fused"] = drv(
+        part.src_row, part.dst_col, part.w, part.eid, part.valid
+    )
+    ref = _eids(flat)
+    for what, r in results.items():
+        assert abs(float(r.weight) - float(flat.weight)) <= max(
+            1e-3, 1e-6 * abs(float(flat.weight))
+        ), (what, float(r.weight), float(flat.weight))
+        assert _eids(r) == ref, f"{what}: MSF edge set drifted"
+        _assert_valid_forest(g, r, what)
+        assert _same_partition(r.parent, flat.parent), what
+    assert drv.last_stats.host_roundtrips == 0
+
+
+# ---------------------------------------------------------------------------
+# fixed seeds — always run, hypothesis or not (the stub only gates @given)
+# ---------------------------------------------------------------------------
+
+# (name, n, m, weight levels, multigraph, seed); n fixed per case keeps the
+# jit cache keyed on a handful of shapes.
+_FIXED_CASES = [
+    ("dense_ties", 24, 96, 3, False, 0),
+    ("multigraph", 24, 96, 4, True, 1),
+    ("sparse_isolated", 32, 20, 8, False, 2),  # most vertices isolated
+    ("duplicate_heavy_multi", 16, 80, 2, True, 3),
+    ("single_edge", 16, 1, 1, False, 4),
+    ("empty", 16, 0, 1, False, 5),
+    ("two_cliques", 24, 60, 5, False, 6),
+]
+
+
+def _fixed_graph(name, n, m, wlevels, multi, seed) -> Graph:
+    rng = np.random.default_rng(seed)
+    if name == "two_cliques":  # two components, no cross edges
+        half = n // 2
+        u = rng.integers(0, half, m)
+        v = rng.integers(0, half, m)
+        flip = rng.random(m) < 0.5
+        u = np.where(flip, u + half, u)
+        v = np.where(flip, v + half, v)
+    elif name == "sparse_isolated":
+        u = rng.integers(0, n // 4, m)  # edges confined to a quarter
+        v = rng.integers(0, n // 4, m)
+    else:
+        u = rng.integers(0, n, m)
+        v = rng.integers(0, n, m)
+    w = rng.integers(1, wlevels + 1, m).astype(np.float64)
+    if multi:
+        return _multigraph(u, v, w, n)
+    return from_edges(u, v, w, n)
+
+
+@pytest.mark.parametrize("case", _FIXED_CASES, ids=[c[0] for c in _FIXED_CASES])
+def test_engines_agree_fixed_seed(case, dist_mesh, dist_mesh_shape):
+    g = _fixed_graph(*case)
+    _check_all_engines(g, dist_mesh, dist_mesh_shape)
+
+
+def test_engines_agree_fully_contracted(dist_mesh, dist_mesh_shape):
+    """A tree contracts completely — some level (or the residual rounds)
+    sees zero surviving edges, and every engine must handle it."""
+    n = 16
+    rng = np.random.default_rng(9)
+    u = np.arange(1, n)
+    v = np.array([rng.integers(0, k) for k in range(1, n)])  # spanning tree
+    w = rng.integers(1, 4, n - 1).astype(np.float64)
+    g = from_edges(u, v, w, n)
+    _check_all_engines(g, dist_mesh, dist_mesh_shape)
+
+
+def test_engines_agree_float_weights(dist_mesh, dist_mesh_shape):
+    """Non-integral weights disable pack32 everywhere — the 3-pass float
+    MINWEIGHT reductions must agree across all four engines too."""
+    n, m = 24, 90
+    rng = np.random.default_rng(11)
+    g = from_edges(
+        rng.integers(0, n, m), rng.integers(0, n, m), rng.random(m) + 0.25, n
+    )
+    _check_all_engines(g, dist_mesh, dist_mesh_shape)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-drawn graphs (skip cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.sampled_from([16, 24, 32]),
+    m=st.integers(min_value=0, max_value=96),
+    wlevels=st.integers(min_value=1, max_value=5),
+    multi=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_engines_agree_property(n, m, wlevels, multi, seed, dist_mesh, dist_mesh_shape):
+    """Random weighted (multi)graphs, tie-heavy weights, arbitrary isolated
+    vertices: all four engines return the same unique (w, eid)-order MSF."""
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    w = rng.integers(1, wlevels + 1, m).astype(np.float64)
+    g = _multigraph(u, v, w, n) if multi else from_edges(u, v, w, n)
+    _check_all_engines(g, dist_mesh, dist_mesh_shape)
