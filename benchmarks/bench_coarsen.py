@@ -1,9 +1,14 @@
 """Coarsening (contract+filter levels) vs the flat AS solve.
 
+Every measured path runs through the unified ``repro.solve`` API
+(``plan(graph_or_part, SolveSpec(...)).solve()``); only the historical
+PR-2 baseline reconstruction reaches into engine internals.
+
 Rows per graph family (rmat at increasing scale, grid road, components):
-- ``coarsen_*`` — ``CoarsenMSF`` end-to-end latency (levels + residual),
-  with ``speedup_vs_flat`` and the level schedule in the derived field;
-- ``flat_*``    — ``core.msf`` over the same graph (what the seed did).
+- ``coarsen_*`` — coarsen-mode plan end-to-end latency (levels +
+  residual), with ``speedup_vs_flat`` and the level schedule in the
+  derived field;
+- ``flat_*``    — a flat plan over the same graph (what the seed did).
 
 ``--fused`` adds ``fused_*`` rows: the one-jit device-resident level
 pipeline (``CoarsenConfig(fused=True)``) against the PR-2 host-round-trip
@@ -11,7 +16,7 @@ level path over the same graphs, with ``speedup_vs_host_levels`` as the
 headline derived metric.
 
 ``--dist`` adds ``dist_fused_*`` rows: the in-mesh fused level pipeline
-(``msf_distributed(part, mesh, coarsen=...)``, dedupe pinned to
+(``SolveSpec(mode="dist", coarsen=...)``, dedupe pinned to
 "device" so the measured path is the zero-round-trip one on every
 backend) against the PR-2 host-prelude pipeline
 (``precontract_partition`` + Fig-2 solve + ``merge_distributed``) on the
@@ -35,43 +40,38 @@ import sys
 
 import numpy as np
 
+from benchmarks.common import assert_msf_parity as _assert_parity
+from benchmarks.common import eid_set as _eid_set
 from benchmarks.common import emit, row, timeit
-from repro.coarsen import CoarsenConfig, CoarsenMSF
-from repro.core.msf import msf
+from repro.coarsen import CoarsenConfig
 from repro.graphs import grid_road_graph, rmat_graph
 from repro.graphs.generators import components_graph
+from repro.solve import SolveSpec, plan
 
 RMAT_SCALES = [12, 13, 14]  # edge factor 8; largest scale is the headline
 EDGE_FACTOR = 8
 SMOKE_SCALE = 8
 
 
-def _eid_set(r):
-    return set(np.asarray(r.msf_eids)[: int(r.n_msf_edges)].tolist())
-
-
-def _assert_parity(flat_r, other_r, what: str):
-    assert abs(float(flat_r.weight) - float(other_r.weight)) <= max(
-        1.0, 1e-6 * float(flat_r.weight)
-    ), (what, float(flat_r.weight), float(other_r.weight))
-    assert _eid_set(flat_r) == _eid_set(other_r), f"{what} MSF edge set drifted"
-
-
 def _bench_graph(name: str, g, cfg: CoarsenConfig, check: bool = False):
-    eng = CoarsenMSF(cfg)
+    p_flat = plan(g, SolveSpec())
+    p_co = plan(g, SolveSpec(mode="coarsen", coarsen=cfg))
+    rep = p_co.solve()  # warms the jit caches AND supplies the level stats
     if check:
-        _assert_parity(msf(g), eng(g), f"coarsen_{name}")
-    t_flat = timeit(lambda: msf(g), iters=3)
-    t_co = timeit(lambda: eng(g), iters=3)
-    st = eng.last_stats
-    sched = "|".join(f"{l.n}/{l.m}>{l.n_next}/{l.m_next}" for l in st.levels)
+        _assert_parity(p_flat.solve(), rep, f"coarsen_{name}")
+    t_flat = timeit(lambda: p_flat.solve(), iters=3)
+    t_co = timeit(lambda: p_co.solve(), warmup=0, iters=3)
+    sched = "|".join(f"{l.n}/{l.m}>{l.n_next}/{l.m_next}" for l in rep.levels)
+    last = rep.levels[-1] if rep.levels else None
+    m_und = int(np.asarray(g.valid).sum()) // 2
     return [
         row(
             f"coarsen_{name}",
             t_co * 1e6,
-            f"speedup_vs_flat={t_flat / t_co:.2f}x;levels={len(st.levels)};"
-            f"schedule={sched};residual_n={st.residual_n};"
-            f"residual_m={st.residual_m}",
+            f"speedup_vs_flat={t_flat / t_co:.2f}x;levels={len(rep.levels)};"
+            f"schedule={sched};"
+            f"residual_n={last.n_next if last else g.n};"
+            f"residual_m={last.m_next if last else m_und}",
         ),
         row(f"flat_{name}", t_flat * 1e6, f"edges={g.num_directed_edges}"),
     ]
@@ -128,7 +128,11 @@ def _bench_fused(name: str, g, cfg: CoarsenConfig, check: bool = False):
     cfg_fused = dataclasses.replace(cfg, fused=True, dedupe="auto")
     cfg_host = dataclasses.replace(cfg, fused=False, dedupe="host")
     if check:
-        _assert_parity(msf(g), CoarsenMSF(cfg_fused)(g), f"fused_{name}")
+        _assert_parity(
+            plan(g, SolveSpec()).solve(),
+            plan(g, SolveSpec(mode="coarsen", coarsen=cfg_fused)).solve(),
+            f"fused_{name}",
+        )
     t_pr2 = timeit(lambda: _pr2_run_levels(g, cfg), iters=3)
     t_host = timeit(lambda: run_levels(g, cfg_host), iters=3)
     t_fused = timeit(lambda: run_levels(g, cfg_fused), iters=3)
@@ -163,38 +167,40 @@ def _bench_dist(name: str, g, cfg: CoarsenConfig, check: bool = False):
     """In-mesh fused levels (zero per-level host re-partitions) vs the PR-2
     host-prelude pipeline (L round-trips + one residual re-partition)."""
     from repro.coarsen import merge_distributed, precontract_partition
-    from repro.core.msf_dist import msf_distributed
     from repro.graphs.partition import partition_edges_2d
 
     mesh, (rows, cols) = _dist_mesh()
     part0 = partition_edges_2d(g, rows, cols)
     cfg_mesh = dataclasses.replace(cfg, fused=True, dedupe="device")
-    drv = msf_distributed(part0, mesh, coarsen=cfg_mesh)
+    p_mesh = plan(part0, SolveSpec(mode="dist", coarsen=cfg_mesh), mesh=mesh)
 
     def run_inmesh():
-        return drv(part0.src_row, part0.dst_col, part0.w, part0.eid, part0.valid)
+        return p_mesh.solve()
 
     cfg_host = dataclasses.replace(cfg, fused=False, dedupe="host")
     # Build the residual driver once: the prelude is deterministic, so the
     # per-iteration re-partition hits the same shapes/executable.
     part_r, prelude = precontract_partition(g, rows, cols, config=cfg_host)
-    drv2 = msf_distributed(part_r, mesh, shortcut="csp", capacity=4096)
+    p_res = plan(
+        part_r, SolveSpec(mode="dist", shortcut="csp", capacity=4096),
+        mesh=mesh,
+    )
 
     def run_prelude():
         p, pre = precontract_partition(g, rows, cols, config=cfg_host)
-        r = drv2(p.src_row, p.dst_col, p.w, p.eid, p.valid)
-        return merge_distributed(pre, r)
+        r = p_res.solve(p.src_row, p.dst_col, p.w, p.eid, p.valid)
+        return merge_distributed(pre, r.raw)
 
     if check:
-        flat_r = msf(g)
-        _assert_parity(flat_r, run_inmesh(), f"dist_fused_{name}")
-        st0 = drv.last_stats
-        assert st0.host_roundtrips == 0, "in-mesh path round-tripped"
-        assert len(st0.levels) >= 1, "in-mesh contraction never ran"
+        flat_r = plan(g, SolveSpec()).solve()
+        rep = run_inmesh()
+        _assert_parity(flat_r, rep, f"dist_fused_{name}")
+        assert rep.host_roundtrips == 0, "in-mesh path round-tripped"
+        assert len(rep.levels) >= 1, "in-mesh contraction never ran"
         _assert_parity(flat_r, run_prelude(), f"dist_prelude_{name}")
     t_mesh = timeit(run_inmesh, iters=3)
     t_pre = timeit(run_prelude, iters=3)
-    st = drv.last_stats
+    st = p_mesh.driver.last_stats
     return [
         row(
             f"dist_fused_{name}",

@@ -1,10 +1,14 @@
 """Streaming MSF engine vs full recompute, plus batched query throughput.
 
+Driven through the unified ``repro.solve`` API (stream plans vs flat
+plans); the deprecated ``StreamingMSF`` construction this file used to
+demonstrate lives on only in the shim-parity suites.
+
 Rows:
-- ``stream_insert_*``    — median latency of one ``insert_batch`` (the
-  sparsification path: MSF over ≤ (n−1) + B padded union edges);
-- ``stream_recompute_*`` — full ``msf()`` over the accumulated edge set at
-  the same point in the stream (what the seed had to do per update);
+- ``stream_insert_*``    — median latency of one ``plan.update`` batch
+  (the sparsification path: MSF over ≤ (n−1) + B padded union edges);
+- ``stream_recompute_*`` — full flat solve over the accumulated edge set
+  at the same point in the stream (what the seed had to do per update);
 - ``stream_queries_*``   — fused snapshot-gather query throughput.
 
 ``--smoke`` streams a tiny graph and *asserts* the engine's forest weight
@@ -20,11 +24,10 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, row, timeit
-from repro.core.msf import msf
 from repro.graphs.generators import rmat_graph
 from repro.graphs.structures import from_edges
 from repro.launch.serve_graph import undirected_edges
-from repro.stream import QueryService, StreamingMSF
+from repro.solve import SolveSpec, plan
 
 SCALE = 14
 EDGE_FACTOR = 8
@@ -43,40 +46,43 @@ def run_smoke_rows():
     n = 1 << SMOKE_SCALE
     g_full = rmat_graph(SMOKE_SCALE, 4, seed=9)
     lo, hi, w = undirected_edges(g_full)
-    engines = {
-        "flat": StreamingMSF(n, batch_capacity=SMOKE_BATCH),
+    plans = {
+        "flat": plan(n, SolveSpec(mode="stream", batch_capacity=SMOKE_BATCH)),
         # cutoff far below n so the rebuild runs real contraction levels
-        "coarsen": StreamingMSF(
-            n, batch_capacity=SMOKE_BATCH,
-            coarsen=CoarsenConfig(cutoff=128), coarsen_threshold=512,
+        "coarsen": plan(
+            n,
+            SolveSpec(
+                mode="stream", batch_capacity=SMOKE_BATCH,
+                coarsen=CoarsenConfig(cutoff=128), coarsen_threshold=512,
+            ),
         ),
     }
     out = []
     n_batches = len(lo) // SMOKE_BATCH
-    for name, eng in engines.items():
+    for name, p in plans.items():
         t0 = time.perf_counter()
+        rep = None
         for k in range(n_batches):
             sl = slice(k * SMOKE_BATCH, (k + 1) * SMOKE_BATCH)
-            eng.insert_batch(lo[sl], hi[sl], w[sl])
+            rep = p.update(lo[sl], hi[sl], w[sl])
         dt = time.perf_counter() - t0
         m_seen = n_batches * SMOKE_BATCH
         g_acc = from_edges(
             lo[:m_seen], hi[:m_seen], w[:m_seen].astype(np.float64), n
         )
-        want = float(msf(g_acc).weight)
-        assert abs(eng.weight - want) <= max(1.0, 1e-6 * want), (
-            name, eng.weight, want,
+        want = plan(g_acc, SolveSpec()).solve().weight
+        assert abs(rep.weight - want) <= max(1.0, 1e-6 * want), (
+            name, rep.weight, want,
         )
         if name == "coarsen":
-            st = eng.last_coarsen_stats
-            assert st is not None and len(st.levels) >= 1, (
+            assert len(rep.levels) >= 1, (
                 "coarsen smoke degenerated to the flat recompute"
             )
         out.append(
             row(
                 f"stream_smoke_{name}_s{SMOKE_SCALE}_b{SMOKE_BATCH}",
                 dt / n_batches * 1e6,
-                f"batches={n_batches};weight={eng.weight:.0f}",
+                f"batches={n_batches};weight={rep.weight:.0f}",
             )
         )
     return out
@@ -90,8 +96,7 @@ def run_rows():
     perm = rng.permutation(len(lo))
     lo, hi, w = lo[perm], hi[perm], w[perm]
 
-    engine = StreamingMSF(n, batch_capacity=BATCH)
-    service = QueryService(engine.snapshots, max_batch=QUERY_BATCH)
+    stream = plan(n, SolveSpec(mode="stream", batch_capacity=BATCH))
 
     # Stream everything in; time the steady-state tail batches.
     n_batches = len(lo) // BATCH
@@ -99,21 +104,23 @@ def run_rows():
     for k in range(n_batches):
         sl = slice(k * BATCH, (k + 1) * BATCH)
         t0 = time.perf_counter()
-        engine.insert_batch(lo[sl], hi[sl], w[sl])
+        stream.update(lo[sl], hi[sl], w[sl])
         lats.append(time.perf_counter() - t0)
     t_insert = float(np.median(lats[max(1, n_batches // 2):]))
 
     # Full recompute over the same accumulated edge set (seed behaviour).
     m_seen = n_batches * BATCH
     g_acc = from_edges(lo[:m_seen], hi[:m_seen], w[:m_seen].astype(np.float64), n)
-    t_full = timeit(lambda: msf(g_acc), iters=2)
+    full = plan(g_acc, SolveSpec())
+    t_full = timeit(lambda: full.solve(), iters=2)
 
+    union_directed = stream._engine.engine.last_union_shape[0]
     name = f"rmat_s{SCALE}_e{EDGE_FACTOR}_b{BATCH}"
     out = [
         row(
             f"stream_insert_{name}",
             t_insert * 1e6,
-            f"union_edges={engine.last_union_shape[0]};"
+            f"union_edges={union_directed};"
             f"updates_per_s={1.0 / t_insert:.1f};"
             f"edges_per_s={BATCH / t_insert:.0f}",
         ),
@@ -127,7 +134,7 @@ def run_rows():
 
     qu = rng.integers(0, n, QUERY_BATCH)
     qv = rng.integers(0, n, QUERY_BATCH)
-    t_q = timeit(lambda: service.connected(qu, qv), iters=3)
+    t_q = timeit(lambda: stream.query(qu, qv), iters=3)
     out.append(
         row(
             f"stream_queries_{name}",

@@ -25,6 +25,22 @@ def row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
 
 
+def eid_set(r) -> set:
+    """MSF edge-id set of a SolveReport (trimmed) or an engine result
+    (IMAX-padded ``msf_eids`` + ``n_msf_edges``)."""
+    eids = np.asarray(r.msf_eids)
+    return set(eids[: int(r.n_msf_edges)].tolist())
+
+
+def assert_msf_parity(ref, other, what: str) -> None:
+    """The shared weight + eid-set parity gate of the smoke benches —
+    one definition so every CI gate enforces the same contract."""
+    assert abs(float(ref.weight) - float(other.weight)) <= max(
+        1.0, 1e-6 * abs(float(ref.weight))
+    ), (what, float(ref.weight), float(other.weight))
+    assert eid_set(ref) == eid_set(other), f"{what}: MSF edge set drifted"
+
+
 def write_json(path: str, rows: list[str]) -> None:
     """Persist CSV rows as a BENCH_*.json trajectory point (CI artifact).
 

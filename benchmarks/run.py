@@ -13,6 +13,7 @@ def main() -> None:
         bench_graph_suite,
         bench_multilinear,
         bench_shortcut,
+        bench_solve,
         bench_stream,
         bench_strong_scaling,
         bench_weak_scaling,
@@ -26,6 +27,7 @@ def main() -> None:
         ("table1-graph-suite", bench_graph_suite),
         ("stream-msf-serving", bench_stream),
         ("coarsen-levels-vs-flat", bench_coarsen),
+        ("solve-api-parity", bench_solve),
     ]
     print("name,us_per_call,derived")
     for label, mod in mods:

@@ -1,6 +1,7 @@
 """End-to-end driver for the paper's system: distributed MSF on an R-MAT
 graph with millions of edges, on a real (host-device) mesh, with the Fig-2
-communication schedule — verified against the scipy oracle.
+communication schedule — verified against the scipy oracle. Every solve
+goes through the unified ``repro.solve`` API.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/msf_at_scale.py
@@ -13,12 +14,11 @@ n_dev = jax.device_count()
 rows = 2 if n_dev >= 8 else 1
 cols = n_dev // rows
 
-from repro.core.msf import msf  # noqa: E402
-from repro.core.msf_dist import msf_distributed  # noqa: E402
 from repro.graphs import rmat_graph  # noqa: E402
 from repro.graphs.partition import partition_edges_2d  # noqa: E402
 from repro.graphs.structures import nx_free_msf_weight  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.solve import SolveSpec, plan  # noqa: E402
 
 SCALE, EDGE_FACTOR = 16, 16  # ~1M directed edges; raise on bigger hosts
 print(f"devices={n_dev}, mesh=({rows},{cols})")
@@ -30,23 +30,23 @@ part = partition_edges_2d(g, rows, cols)
 print(f"2D partition: {part.rows}x{part.cols} blocks, E_max/device={part.e_max}")
 
 for shortcut in ("csp", "baseline"):
-    drv = msf_distributed(part, mesh, shortcut=shortcut, capacity=1 << 16)
-    args = (part.src_row, part.dst_col, part.w, part.eid, part.valid)
-    r = drv(*args)  # compile + run
-    jax.block_until_ready(r.weight)
+    p = plan(
+        part,
+        SolveSpec(mode="dist", shortcut=shortcut, capacity=1 << 16),
+        mesh=mesh,
+    )
+    r = p.solve()  # compile + run
     t0 = time.perf_counter()
-    r = drv(*args)
-    jax.block_until_ready(r.weight)
+    r = p.solve()
     dt = time.perf_counter() - t0
-    print(f"[{shortcut:8s}] weight={float(r.weight):.0f} iters={int(r.iterations)} "
+    print(f"[{shortcut:8s}] weight={r.weight:.0f} iters={r.iterations} "
           f"time={dt*1e3:.0f}ms ({g.num_directed_edges/dt/1e6:.1f} Medges/s)")
 
 oracle = nx_free_msf_weight(g)
-print(f"oracle={oracle:.0f} -> {'MATCH' if abs(oracle - float(r.weight)) < 1e-3 else 'MISMATCH'}")
+print(f"oracle={oracle:.0f} -> {'MATCH' if abs(oracle - r.weight) < 1e-3 else 'MISMATCH'}")
 
 # single-device reference path for comparison
 t0 = time.perf_counter()
-r1 = msf(g)
-jax.block_until_ready(r1.weight)
-print(f"[single  ] weight={float(r1.weight):.0f} iters={int(r1.iterations)} "
+r1 = plan(g, SolveSpec()).solve()
+print(f"[single  ] weight={r1.weight:.0f} iters={r1.iterations} "
       f"time={(time.perf_counter()-t0)*1e3:.0f}ms (incl. compile)")

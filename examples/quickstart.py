@@ -1,26 +1,36 @@
-"""Quickstart: the paper's algorithm in five lines of public API.
+"""Quickstart: the paper's algorithm through the unified solver API.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import connected_components, msf
+from repro.core import connected_components
 from repro.graphs import rmat_graph
 from repro.graphs.structures import nx_free_msf_weight
+from repro.solve import SolveSpec, plan
 
 # An R-MAT graph with integer weights 1..255 (the paper's §VII setup).
 g = rmat_graph(scale=12, edge_factor=8, seed=0)
 
-result = msf(g)  # algebraic Awerbuch-Shiloach, complete shortcutting
+# A SolveSpec is a frozen description of *which* engine and *how*;
+# plan() compiles it against the graph (cached per spec + shapes).
+result = plan(g, SolveSpec()).solve()  # algebraic Awerbuch-Shiloach
 print(f"graph: n={g.n}, undirected edges={g.num_directed_edges // 2}")
-print(f"MSF weight      : {float(result.weight):.0f}")
+print(f"MSF weight      : {result.weight:.0f}")
 print(f"scipy oracle    : {nx_free_msf_weight(g):.0f}")
-print(f"AS iterations   : {int(result.iterations)}")
-print(f"MSF edges       : {int(result.n_msf_edges)}")
+print(f"AS iterations   : {result.iterations}")
+print(f"MSF edges       : {result.n_msf_edges}")
 
 cc = connected_components(g)
 print(f"components      : {int(cc.n_components)} (CC baseline, §II-D)")
 
 # the three shortcut strategies from §IV-B produce identical forests
 for strategy in ("complete", "csp", "os"):
-    r = msf(g, shortcut=strategy)
-    assert abs(float(r.weight) - float(result.weight)) < 1e-3
+    r = plan(g, SolveSpec(shortcut=strategy)).solve()
+    assert abs(r.weight - result.weight) < 1e-3
 print("shortcut strategies agree: complete == csp == os")
+
+# the coarsening engine (Borůvka contract-and-filter levels, DESIGN.md §7)
+# is one spec field away — same forest, geometrically smaller levels
+r = plan(g, SolveSpec(mode="coarsen", fused=True)).solve()
+assert abs(r.weight - result.weight) < 1e-3
+print(f"coarsen levels  : {len(r.levels)} "
+      f"({'|'.join(str(l.n) + '>' + str(l.n_next) for l in r.levels)})")

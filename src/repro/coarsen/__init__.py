@@ -5,8 +5,8 @@ from repro.coarsen.contract import (
     contract_level,
     contract_level_und,
 )
+from repro.coarsen.config import CoarsenConfig
 from repro.coarsen.engine import (
-    CoarsenConfig,
     CoarsenMSF,
     CoarsenPrelude,
     CoarsenStats,

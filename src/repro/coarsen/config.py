@@ -1,0 +1,64 @@
+"""Static configuration of the contract-and-filter pipeline.
+
+Leaf module — imported by the engine, the distributed driver, the
+streaming rebuild hook, and the ``repro.solve`` spec layer alike, so it
+must not import any of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+#: Every segment-min backend any level kernel understands. "sorted" is
+#: dedupe-only (contiguous-range kernel); the hook reductions degrade it
+#: to "auto" (`repro.solve.spec.resolve_level_segmins`).
+SEGMIN_BACKENDS = (None, "auto", "jnp", "pallas", "sorted")
+
+#: Edge-dedupe backends: "device" = the jitted sort + pack32 segment-min
+#: pipeline, "host" = the numpy lexsort twin, "auto" = pick by
+#: ``jax.default_backend()`` (resolved in `repro.solve.spec`).
+DEDUPE_BACKENDS = ("auto", "device", "host")
+
+
+@dataclasses.dataclass(frozen=True)
+class CoarsenConfig:
+    """Static knobs of the contract-and-filter pipeline (hashable — safe
+    to thread through jit-static plumbing)."""
+
+    rounds_per_level: int = 2  # K hook+shortcut rounds per level
+    cutoff: int = 2048  # hand off to core.msf when n ≤ cutoff
+    max_levels: int = 16
+    pack: bool | None = None  # pack32 level kernels; None = auto-detect
+    # Packed segment-min backend ("jnp"/"pallas"/"sorted"/"auto"). The
+    # hook reduction's segment ids are unsorted, so "sorted" there means
+    # "auto"; the *dedupe* step's ids are sorted, so "pallas"/"sorted"
+    # both select the contiguous-range sorted kernel for it.
+    segmin: str | None = None
+    # Edge-dedupe backend: the jitted sort + pack32 segment-min pipeline
+    # ("device", the TPU path) or the numpy lexsort twin ("host" — the
+    # CPU backend, where numpy's sort beats XLA's CPU sort ~5-10x).
+    # "auto" picks by jax.default_backend(). Under ``fused=True`` the
+    # whole level lives in one jit, and "host" means the dedupe stage
+    # hops through a ``pure_callback`` (zero-copy on CPU — device and
+    # host share memory there) while everything else stays compiled.
+    dedupe: str = "auto"
+    # Run each level as one jitted call (contract → relabel → sort-dedupe
+    # → device compaction) with static edge-capacity padding, instead of
+    # the separate contract jit + host/device filter per level.
+    fused: bool = False
+
+    def __post_init__(self):
+        if self.rounds_per_level < 1:
+            raise ValueError("rounds_per_level must be >= 1")
+        if self.cutoff < 1:
+            raise ValueError("cutoff must be >= 1")
+        if self.max_levels < 1:
+            raise ValueError("max_levels must be >= 1")
+        if self.dedupe not in DEDUPE_BACKENDS:
+            raise ValueError(f"unknown dedupe backend {self.dedupe!r}")
+        # segmin used to survive unvalidated until make_packed_segmin blew
+        # up deep inside a level kernel; validate it next to dedupe.
+        if self.segmin not in SEGMIN_BACKENDS:
+            raise ValueError(
+                f"unknown segmin backend {self.segmin!r} "
+                f"(expected one of {SEGMIN_BACKENDS})"
+            )

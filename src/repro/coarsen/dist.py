@@ -56,19 +56,15 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.coarsen.contract import contract_rounds, make_und_reduce
-from repro.coarsen.engine import (
-    CoarsenConfig,
-    LevelStats,
-    _auto_pack,
-    _next_pow2,
-    _resolve_segmins,
-)
+from repro.coarsen.config import CoarsenConfig
+from repro.coarsen.engine import LevelStats, _next_pow2
 from repro.coarsen.filter import filter_level_host, filter_level_impl
 from repro.coarsen.relabel import canonical_minvertex_labels
 from repro.core.msf import MSFResult, hook_and_tiebreak, record_edges
 from repro.core.semiring import IMAX
 from repro.core.shortcut import complete_shortcut
 from repro.graphs.partition import Partition2D, block_global_ids
+from repro.solve.spec import auto_pack, resolve_dedupe, resolve_level_segmins
 
 _IMAX_NP = np.int32(np.iinfo(np.int32).max)
 
@@ -288,7 +284,7 @@ class DistCoarsenMSF:
             _next_pow2(int(eids_live.max()) + 1) if eids_live.size else 8
         )
         use_pack = (
-            _auto_pack(w_np, eid_np, valid_np, eid_cap)
+            auto_pack(w_np, eid_np, valid_np, eid_cap)
             if self.config.pack is None
             else self.config.pack
         )
@@ -302,11 +298,8 @@ class DistCoarsenMSF:
         src_g, dst_g, w_np, eid_np, valid_np, eid_cap, use_pack = (
             self._prepare(src_row, dst_col, w, eid, valid)
         )
-        segmin_hook, segmin_dedupe = _resolve_segmins(cfg, use_pack)
-        dedupe = cfg.dedupe
-        if dedupe == "auto":
-            dedupe = "device" if jax.default_backend() == "tpu" else "host"
-        in_mesh = dedupe != "host"
+        segmin_hook, segmin_dedupe = resolve_level_segmins(cfg.segmin, use_pack)
+        in_mesh = resolve_dedupe(cfg.dedupe) != "host"
 
         lo, hi, w_b, eid_b, valid_b = src_g, dst_g, w_np, eid_np, valid_np
         if in_mesh:

@@ -31,55 +31,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.coarsen.config import CoarsenConfig
 from repro.coarsen.contract import contract_level, contract_level_und
 from repro.coarsen.filter import (
     filter_level,
     filter_level_callback,
     filter_level_host,
 )
-from repro.core.msf import MSFResult, msf as _flat_msf
-from repro.core.semiring import PACK_IDX_MASK
+from repro.core.msf import MSFResult, flat_msf as _flat_msf
 from repro.graphs.partition import Partition2D, partition_edges_2d
 from repro.graphs.structures import Graph, graph_from_canonical
+from repro.solve.spec import auto_pack, resolve_dedupe, resolve_level_segmins
 from repro.stream.service import next_pow2
 
 _IMAX = np.int32(np.iinfo(np.int32).max)
-
-
-@dataclasses.dataclass(frozen=True)
-class CoarsenConfig:
-    """Static knobs of the contract-and-filter pipeline (hashable — safe
-    to thread through jit-static plumbing)."""
-
-    rounds_per_level: int = 2  # K hook+shortcut rounds per level
-    cutoff: int = 2048  # hand off to core.msf when n ≤ cutoff
-    max_levels: int = 16
-    pack: bool | None = None  # pack32 level kernels; None = auto-detect
-    # Packed segment-min backend ("jnp"/"pallas"/"sorted"/"auto"). The
-    # hook reduction's segment ids are unsorted, so "sorted" there means
-    # "auto"; the *dedupe* step's ids are sorted, so "pallas"/"sorted"
-    # both select the contiguous-range sorted kernel for it.
-    segmin: str | None = None
-    # Edge-dedupe backend: the jitted sort + pack32 segment-min pipeline
-    # ("device", the TPU path) or the numpy lexsort twin ("host" — the
-    # CPU backend, where numpy's sort beats XLA's CPU sort ~5-10x).
-    # "auto" picks by jax.default_backend(). Under ``fused=True`` the
-    # whole level lives in one jit, and "host" means the dedupe stage
-    # hops through a ``pure_callback`` (zero-copy on CPU — device and
-    # host share memory there) while everything else stays compiled.
-    dedupe: str = "auto"
-    # Run each level as one jitted call (contract → relabel → sort-dedupe
-    # → device compaction) with static edge-capacity padding, instead of
-    # the separate contract jit + host/device filter per level.
-    fused: bool = False
-
-    def __post_init__(self):
-        if self.rounds_per_level < 1:
-            raise ValueError("rounds_per_level must be >= 1")
-        if self.cutoff < 1:
-            raise ValueError("cutoff must be >= 1")
-        if self.dedupe not in ("auto", "device", "host"):
-            raise ValueError(f"unknown dedupe backend {self.dedupe!r}")
 
 
 class LevelStats(NamedTuple):
@@ -123,19 +88,6 @@ def _eid_capacity(eid: np.ndarray, m0: int) -> int:
     return _next_pow2(int(np.asarray(eid[:m0]).max()) + 1)
 
 
-def _auto_pack(w: np.ndarray, eid: np.ndarray, valid: np.ndarray, e_dir: int) -> bool:
-    """pack32 applies when weights are integral in [0, 255] and both the
-    global eids and the per-level position indices fit 24 bits strictly."""
-    if e_dir >= PACK_IDX_MASK:
-        return False
-    wv = w[valid]
-    if wv.size == 0:
-        return True
-    if not (np.all(wv == np.floor(wv)) and wv.min() >= 0 and wv.max() <= 255):
-        return False
-    return int(eid[valid].max()) < PACK_IDX_MASK
-
-
 def _canonical_host(graph: Graph):
     """Host copies of the undirected (lo < hi) edge set, pow2-padded."""
     src = np.asarray(graph.src)
@@ -155,29 +107,6 @@ def _canonical_host(graph: Graph):
     ww[:m0], ee[:m0] = w[sel], eid[sel]
     vv[:m0] = True
     return lo, hi, ww, ee, vv, m0
-
-
-def _resolve_segmins(cfg: CoarsenConfig, use_pack: bool):
-    """(hook segmin, dedupe segmin) callables for the level kernels.
-
-    The hook reduction (``contract_level``) sees *unsorted* segment ids
-    (roots of the current parent vector), so "sorted" degrades to "auto"
-    there. The dedupe's ids are the boundary prefix-sum over sorted pair
-    keys — resolution lives in ``kernels.ops.dedupe_segmin_backend``
-    (shared with the distributed fused level).
-    """
-    if not use_pack:
-        return None, None
-    from repro.kernels.ops import (
-        dedupe_segmin_backend,
-        flat_segmin_backend,
-        make_packed_segmin,
-    )
-
-    hook = None
-    if cfg.segmin not in (None, "jnp"):
-        hook = make_packed_segmin(flat_segmin_backend(cfg.segmin))
-    return hook, dedupe_segmin_backend(cfg.segmin)
 
 
 class FusedLevel(NamedTuple):
@@ -280,10 +209,8 @@ def _run_levels_fused(
     """Level loop over :func:`fused_level`: edge arrays and ``label_map``
     stay on device across levels; only per-level scalars (n_next, m_new)
     and the hooked eids cross to the host for loop control/bookkeeping."""
-    segmin_hook, segmin_dedupe = _resolve_segmins(cfg, use_pack)
-    dedupe = cfg.dedupe
-    if dedupe == "auto":
-        dedupe = "device" if jax.default_backend() == "tpu" else "host"
+    segmin_hook, segmin_dedupe = resolve_level_segmins(cfg.segmin, use_pack)
+    dedupe = resolve_dedupe(cfg.dedupe)
     n0 = graph.n
     lo_h, hi_h, w_h, eid_h, valid_h, m_cur = canon
     eid_cap = _eid_capacity(eid_h, m_cur)
@@ -343,8 +270,8 @@ def run_levels(graph: Graph, config: CoarsenConfig | None = None) -> CoarsenPrel
     n0 = graph.n
     lo, hi, w, eid, valid, m_cur = _canonical_host(graph)
     use_pack = (
-        _auto_pack(np.asarray(graph.w), np.asarray(graph.eid),
-                   np.asarray(graph.valid), 2 * len(lo))
+        auto_pack(np.asarray(graph.w), np.asarray(graph.eid),
+                  np.asarray(graph.valid), 2 * len(lo))
         if cfg.pack is None
         else cfg.pack
     )
@@ -352,10 +279,8 @@ def run_levels(graph: Graph, config: CoarsenConfig | None = None) -> CoarsenPrel
         return _run_levels_fused(
             graph, cfg, use_pack, (lo, hi, w, eid, valid, m_cur)
         )
-    segmin_fn, segmin_dedupe_fn = _resolve_segmins(cfg, use_pack)
-    dedupe = cfg.dedupe
-    if dedupe == "auto":
-        dedupe = "device" if jax.default_backend() == "tpu" else "host"
+    segmin_fn, segmin_dedupe_fn = resolve_level_segmins(cfg.segmin, use_pack)
+    dedupe = resolve_dedupe(cfg.dedupe)
     eid_cap = _eid_capacity(eid, m_cur)
 
     label_map = np.arange(n0, dtype=np.int32)
@@ -471,17 +396,13 @@ class CoarsenMSF:
     def __init__(self, config: CoarsenConfig | None = None, **msf_kw):
         self.config = config or CoarsenConfig()
         # segmin only parameterizes the pack=True inner loop of core.msf;
-        # for a float residual it would be rejected there, so keep it for
+        # for a float residual it would be ignored there, so keep it for
         # the levels (via config) but only forward alongside pack=True.
+        # (The residual call goes through ``core.msf.flat_msf``, whose
+        # backend resolution — including the "sorted"-degrades rule for
+        # unsorted hook segments — lives in ``repro.solve.spec``.)
         if not msf_kw.get("pack"):
             msf_kw.pop("segmin", None)
-        else:
-            # The residual solver's hook reduction has unsorted segment
-            # ids; "sorted" is a dedupe-only backend. Let the levels keep
-            # it (via config) and give the residual the flat resolution.
-            from repro.kernels.ops import flat_segmin_backend
-
-            msf_kw["segmin"] = flat_segmin_backend(msf_kw.get("segmin"))
         self.msf_kw = msf_kw
         self.last_stats: CoarsenStats | None = None
 

@@ -23,7 +23,6 @@ Outputs: total MSF weight, the MSF edge set (global eids), parent vector
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import NamedTuple
 
@@ -196,6 +195,22 @@ def _msf_jit(
     return MSFResult(weight=total, parent=p, msf_eids=msf_eids, n_msf_edges=n_f, iterations=it)
 
 
+def flat_msf(graph: Graph, *, pack: bool = False, segmin: str | None = None,
+             **kw) -> MSFResult:
+    """Internal flat AS solve — the non-deprecated twin of the old
+    ``msf()`` kwarg path, used by the ``repro.solve`` engines and the
+    residual/union solves of the coarsen and stream stacks.
+
+    ``segmin`` is the *string* backend request; resolution (including
+    the "sorted"-degrades-to-"auto" rule for unsorted hook segments)
+    lives in ``repro.solve.spec.resolve_flat_segmin``. No validation —
+    public callers go through ``SolveSpec``, which validates once.
+    """
+    from repro.solve.spec import resolve_flat_segmin  # lazy: layer cycle
+
+    return _msf_jit(graph, pack=pack, segmin=resolve_flat_segmin(segmin, pack), **kw)
+
+
 def msf(
     graph: Graph,
     *,
@@ -204,7 +219,21 @@ def msf(
     fused: bool | None = None,
     **kw,
 ) -> MSFResult:
-    """Compute the minimum spanning forest of ``graph``.
+    """Deprecated: compute the MSF of ``graph`` (kwarg-dispatch form).
+
+    .. deprecated::
+        Use the declarative API instead::
+
+            from repro.solve import SolveSpec, plan
+            plan(graph, SolveSpec()).solve()                    # flat
+            plan(graph, SolveSpec(mode="coarsen",               # levels
+                                  coarsen=cfg, fused=True)).solve()
+
+        This shim builds the equivalent ``SolveSpec``, routes through
+        ``repro.solve.plan``, and returns the engine-native
+        ``MSFResult`` — bit-identical to the historical behavior (the
+        4-way property suite pins it). It will be removed once the
+        deprecation window closes; see DESIGN.md §9.
 
     variant: "complete" | "paper" | "pairwise"
     shortcut (complete variant only): "complete" | "csp" | "os"
@@ -212,47 +241,53 @@ def msf(
       callers that maintain their own component labels (e.g. an incremental
       connectivity refresh). Hooking starts from these components instead
       of singletons, so the returned ``weight``/``msf_eids`` cover only the
-      edges hooked *during this call*. Note the streaming engine's
-      ``insert_batch`` deliberately starts cold: a warm start cannot evict
-      a heavier pre-existing forest edge from a cycle (DESIGN.md §6.1).
-      Any forest labeling works — it is canonicalized to stars first.
+      edges hooked *during this call*. Any forest labeling works — it is
+      canonicalized to stars first.
     pack: use the pack32 single-reduction inner loop (integer weights in
       [0, 255], eids < 2^24 − 1 — the paper's evaluation regime).
     segmin: packed segment-min backend for ``pack=True`` — "jnp",
-      "pallas", or "auto" / None (Pallas on TPU, interpret elsewhere only
-      when forced; see ``kernels.ops.make_packed_segmin``).
+      "pallas", or "auto" / None.
     coarsen: None for the flat solver, or a
       ``repro.coarsen.CoarsenConfig`` (or ``True`` for defaults) to run
-      Borůvka contract-and-filter levels first and hand only the residual
-      graph to this driver (DESIGN.md §7). Incompatible with ``parent0``.
-    fused: with ``coarsen=``, run each level as one jitted
-      contract/relabel/sort-dedupe/compact call (device-resident between
-      levels, DESIGN.md §7.6); overrides ``CoarsenConfig.fused``.
-      Meaningless without ``coarsen=`` (rejected).
+      Borůvka contract-and-filter levels first (DESIGN.md §7).
+      Incompatible with ``parent0``.
+    fused: with ``coarsen=``, one-jit device-resident levels
+      (DESIGN.md §7.6); overrides ``CoarsenConfig.fused``.
     """
-    if coarsen is not None and coarsen is not False:
-        from repro.coarsen.engine import coarsen_msf  # lazy: avoid cycle
+    import warnings
 
-        if kw.get("parent0") is not None:
+    warnings.warn(
+        "msf(...) is deprecated; build a repro.solve.SolveSpec and call "
+        "plan(graph, spec).solve() instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro import solve  # lazy: core must not import the plan layer eagerly
+
+    parent0 = kw.pop("parent0", None)
+    use_coarsen = coarsen is not None and coarsen is not False
+    if use_coarsen:
+        if parent0 is not None:
             raise ValueError("coarsen= cannot be combined with parent0=")
-        config = None if coarsen is True else coarsen
-        return coarsen_msf(graph, config=config, segmin=segmin, fused=fused, **kw)
-    if fused:
-        raise ValueError("fused=True requires coarsen= (it fuses the levels)")
-    if kw.get("pack"):
-        if segmin == "sorted":
-            raise ValueError(
-                "segmin='sorted' needs sorted segment ids — only the "
-                "coarsen dedupe provides them; the flat hook loop's ids "
-                "are unsorted (use 'pallas'/'jnp'/'auto' here)"
-            )
-        from repro.kernels.ops import make_packed_segmin  # lazy: kernels layer
-
-        kw["segmin"] = make_packed_segmin(segmin or "auto")
-    elif segmin not in (None, "auto"):
-        raise ValueError("segmin= only applies to the pack=True inner loop")
-    return _msf_jit(graph, **kw)
+        spec = solve.SolveSpec(
+            mode="coarsen",
+            coarsen=True if coarsen is True else coarsen,
+            segmin=segmin,
+            fused=fused,
+            pack=kw.pop("pack", None),
+            **kw,
+        )
+        return solve.plan(graph, spec).solve().raw
+    spec = solve.SolveSpec(
+        mode="flat",
+        segmin=segmin,
+        fused=True if fused else None,  # surfaces the old ValueError
+        pack=kw.pop("pack", False),
+        **kw,
+    )
+    return solve.plan(graph, spec).solve(parent0=parent0).raw
 
 
 def msf_weight(graph: Graph, **kw) -> float:
+    """Deprecated alongside :func:`msf` (it delegates to it)."""
     return float(msf(graph, **kw).weight)

@@ -23,7 +23,6 @@ Per outer iteration (all inside one ``shard_map``-ped ``while_loop``):
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -110,32 +109,81 @@ def msf_distributed(
     pack: bool = False,
     coarsen=None,
 ):
-    """Returns a jitted function (src_row, dst_col, w, eid, valid, p0) →
-    DistMSFResult, plus ready-to-pass input arrays from ``part``.
+    """Deprecated: build the distributed MSF driver (kwarg-dispatch form).
+
+    .. deprecated::
+        This entry point has a **dual return type** — a jitted block
+        driver function without ``coarsen=``, a
+        ``repro.coarsen.dist.DistCoarsenMSF`` instance with it — which is
+        exactly the kind of kwarg-keyed dispatch ``repro.solve``
+        replaces. Use::
+
+            from repro.solve import SolveSpec, plan
+            p = plan(part, SolveSpec(mode="dist"), mesh=mesh)       # flat
+            p = plan(part, SolveSpec(mode="dist", coarsen=cfg),     # fused
+                     mesh=mesh)                                     # levels
+            report = p.solve()          # uniform SolveReport, either way
+
+        Removal path: this shim now routes **both** branches through
+        ``repro.solve.plan`` (so repeated builds share the plan cache)
+        and returns the plan's engine-native driver for call-pattern
+        compatibility; when the deprecation window closes the shim and
+        its dual return type disappear, and ``plan(...).solve()`` —
+        whose report is uniform across both branches — is the only
+        surface. See DESIGN.md §9.
 
     Shapes: edges [R, C, Emax] sharded over (row_axis, col_axis); parent
-    vector [n_pad] sharded over the flattened mesh.
-
-    ``coarsen``: ``None`` for the flat Fig-2 solve above, or a
-    ``repro.coarsen.CoarsenConfig`` (``True`` for defaults) to run
-    Borůvka contract-and-filter levels **inside the mesh** first
-    (DESIGN.md §8) — ``part`` must then partition the *original* graph,
-    and the returned driver (a ``repro.coarsen.dist.DistCoarsenMSF``,
-    same call signature, per-run ``last_stats``) yields an ``MSFResult``
-    in original-graph ids. The levels keep the parent vector replicated
-    (n shrinks geometrically), so ``shortcut``/``capacity`` do not apply
-    there and are ignored; ``pack`` is governed by the config
-    (auto-detected when ``config.pack`` is None).
+    vector [n_pad] sharded over the flattened mesh. ``coarsen``: ``None``
+    for the flat Fig-2 solve, or a ``CoarsenConfig`` (``True`` for
+    defaults) to run contract-and-filter levels inside the mesh first
+    (DESIGN.md §8); ``shortcut``/``capacity`` only apply to the flat
+    solve, ``pack`` is governed by the config under ``coarsen=``.
     """
-    if coarsen is not None and coarsen is not False:
-        from repro.coarsen.dist import DistCoarsenMSF  # lazy: avoid cycle
-        from repro.coarsen.engine import CoarsenConfig
+    import warnings
 
-        config = CoarsenConfig() if coarsen is True else coarsen
-        return DistCoarsenMSF(
-            part, mesh, config,
-            row_axis=row_axis, col_axis=col_axis, max_iters=max_iters,
-        )
+    warnings.warn(
+        "msf_distributed(...) is deprecated; use repro.solve.plan(part, "
+        "SolveSpec(mode='dist', ...), mesh=mesh) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro import solve  # lazy: core must not import the plan layer eagerly
+
+    use_coarsen = coarsen is not None and coarsen is not False
+    spec = solve.SolveSpec(
+        mode="dist",
+        coarsen=(True if coarsen is True else coarsen) if use_coarsen else None,
+        shortcut=None if use_coarsen else shortcut,
+        capacity=capacity,
+        max_iters=max_iters,
+        pack=None if use_coarsen else pack,  # coarsen: config governs pack
+        row_axis=row_axis,
+        col_axis=col_axis,
+    )
+    return solve.plan(part, spec, mesh=mesh).driver
+
+
+def build_dist_driver(
+    part: Partition2D,
+    mesh,
+    *,
+    row_axis: str = "data",
+    col_axis: str = "model",
+    shortcut: str = "csp",
+    capacity: int = 1 << 16,
+    max_iters: int | None = None,
+    pack: bool = False,
+):
+    """Internal: the flat Fig-2 distributed driver builder.
+
+    Returns a jitted function (src_row, dst_col, w, eid, valid) →
+    ``DistMSFResult``. Only reads the partition's *static* fields
+    (``n_pad``, ``cols``, ``shard_size``), so one driver serves every
+    same-shape partition — which is what the ``repro.solve`` plan cache
+    keys on. Public callers go through ``plan(part, SolveSpec
+    (mode="dist"), mesh=...)``; the in-mesh coarsening variant lives in
+    ``repro.coarsen.dist.DistCoarsenMSF``.
+    """
     n_pad = part.n_pad
     capacity = min(capacity, n_pad)
     limit = jnp.int32(

@@ -353,7 +353,7 @@ def _recsys_cell(arch: str, cfg: RecsysConfig, shape: ShapeCell, mesh, variant: 
 # ---------------------------------------------------------------------------
 
 def build_msf_cell(shape: ShapeCell, mesh, *, shortcut="csp", capacity=1 << 20, pack=0) -> Cell:
-    from repro.core.msf_dist import msf_distributed
+    from repro.core.msf_dist import build_dist_driver
     from repro.graphs.partition import Partition2D, pad_n
 
     axes = mesh.axis_names
@@ -372,7 +372,7 @@ def build_msf_cell(shape: ShapeCell, mesh, *, shortcut="csp", capacity=1 << 20, 
         src_row=None, dst_col=None, w=None, eid=None, valid=None,
         rows=rows, cols=cols, shard_size=S, n=n, n_pad=n_pad,
     )
-    driver = msf_distributed(
+    driver = build_dist_driver(
         part, mesh, row_axis=row_axis, col_axis="model",
         shortcut=shortcut, capacity=capacity, pack=bool(pack),
     )

@@ -1,10 +1,11 @@
 """Streaming MSF serving demo: replay a synthetic insert/query workload.
 
-Generates an R-MAT edge stream, feeds it to ``repro.stream.StreamingMSF``
-in fixed-size insert batches, and interleaves batched connectivity queries
-answered from the published snapshots — then reports update latency
-percentiles, query throughput, and verifies the final forest against a
-from-scratch ``msf()`` over the accumulated edge set.
+Generates an R-MAT edge stream, feeds it to a ``repro.solve`` stream
+plan (``SolveSpec(mode="stream")``) in fixed-size insert batches, and
+interleaves batched connectivity queries answered from the published
+snapshots — then reports update latency percentiles, query throughput,
+and verifies the final forest against a from-scratch flat plan over the
+accumulated edge set.
 
   PYTHONPATH=src python -m repro.launch.serve_graph --scale 12 --edge-factor 8 \
       --batch-size 2048 --queries-per-batch 8192
@@ -41,10 +42,9 @@ def main():
     if args.queries_per_batch < 1:
         ap.error("--queries-per-batch must be >= 1")
 
-    from repro.core.msf import msf
     from repro.graphs.generators import rmat_graph
     from repro.graphs.structures import from_edges
-    from repro.stream import QueryService, StreamingMSF
+    from repro.solve import SolveSpec, plan
 
     n = 1 << args.scale
     g_full = rmat_graph(args.scale, args.edge_factor, seed=args.seed)
@@ -54,8 +54,10 @@ def main():
     lo, hi, w = lo[perm], hi[perm], w[perm]
     n_batches = (len(lo) + args.batch_size - 1) // args.batch_size
 
-    engine = StreamingMSF(n, batch_capacity=args.batch_size)
-    service = QueryService(engine.snapshots, max_batch=args.queries_per_batch)
+    stream = plan(
+        n, SolveSpec(mode="stream", batch_capacity=args.batch_size)
+    )
+    engine = stream.engine  # forest introspection for --delete-every
     print(
         f"# n={n} edges={len(lo)} batches={n_batches} "
         f"union_buffer={2 * engine.union_edge_capacity} directed slots"
@@ -65,21 +67,21 @@ def main():
     for k in range(n_batches):
         sl = slice(k * args.batch_size, (k + 1) * args.batch_size)
         t0 = time.perf_counter()
-        stats = engine.insert_batch(lo[sl], hi[sl], w[sl])
+        rep = stream.update(lo[sl], hi[sl], w[sl])
         up_lat.append(time.perf_counter() - t0)
         if args.delete_every and (k + 1) % args.delete_every == 0:
             flo, fhi, _, _ = engine.forest_edges()
             kill = rng.integers(0, len(flo), size=min(8, len(flo)))
-            engine.delete_batch(flo[kill], fhi[kill])
+            stream.delete(flo[kill], fhi[kill])
         qu = rng.integers(0, n, args.queries_per_batch)
         qv = rng.integers(0, n, args.queries_per_batch)
         t0 = time.perf_counter()
-        service.connected(qu, qv)
+        stream.query(qu, qv)
         q_tp.append(args.queries_per_batch / (time.perf_counter() - t0))
         if k % max(1, n_batches // 10) == 0:
             print(
-                f"batch {k:4d}: v{stats.version} weight={stats.weight:.0f} "
-                f"ncc={stats.n_components} update={up_lat[-1] * 1e3:.1f}ms "
+                f"batch {k:4d}: v{rep.raw.version} weight={rep.weight:.0f} "
+                f"ncc={rep.n_components} update={up_lat[-1] * 1e3:.1f}ms "
                 f"queries={q_tp[-1] / 1e6:.2f}M/s"
             )
 
@@ -93,10 +95,13 @@ def main():
           f"(batch={args.queries_per_batch})")
 
     if not args.delete_every:
-        r = msf(from_edges(lo, hi, w.astype(np.float64), n))
-        ok = abs(float(r.weight) - engine.weight) < max(1.0, 1e-6 * engine.weight)
-        print(f"verify vs full recompute: weight {engine.weight:.0f} vs "
-              f"{float(r.weight):.0f} -> {'OK' if ok else 'MISMATCH'}")
+        full = plan(
+            from_edges(lo, hi, w.astype(np.float64), n), SolveSpec()
+        ).solve()
+        weight = stream.solve().weight
+        ok = abs(full.weight - weight) < max(1.0, 1e-6 * weight)
+        print(f"verify vs full recompute: weight {weight:.0f} vs "
+              f"{full.weight:.0f} -> {'OK' if ok else 'MISMATCH'}")
         if not ok:
             raise SystemExit(1)
 

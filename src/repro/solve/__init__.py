@@ -1,0 +1,40 @@
+# Unified solver API (DESIGN.md §9): declarative SolveSpec → resolve →
+# plan → SolveReport across the flat / coarsen / dist / stream engines.
+#
+#     from repro.solve import SolveSpec, plan
+#     report = plan(graph, SolveSpec(mode="coarsen")).solve()
+#
+# The spec/report layers import eagerly (leaf dependencies only); the
+# plan compiler and its engine registry load lazily on first attribute
+# access so `import repro.solve` never drags the whole engine stack in
+# (and the engines themselves can import `repro.solve.spec` without a
+# cycle).
+from repro.solve.report import SolveReport, report_from_msf_result
+from repro.solve.spec import ResolvedSpec, SolveSpec
+
+_PLANNER_NAMES = (
+    "plan",
+    "Plan",
+    "register_engine",
+    "registered_modes",
+    "plan_cache_info",
+    "clear_plan_cache",
+    "PLAN_CACHE_MAXSIZE",
+)
+
+__all__ = [
+    "SolveSpec",
+    "ResolvedSpec",
+    "SolveReport",
+    "report_from_msf_result",
+    *_PLANNER_NAMES,
+]
+
+
+def __getattr__(name):
+    if name in _PLANNER_NAMES:
+        from repro.solve import engines as _  # noqa: F401 — registers built-ins
+        from repro.solve import planner
+
+        return getattr(planner, name)
+    raise AttributeError(f"module 'repro.solve' has no attribute {name!r}")

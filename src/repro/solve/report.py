@@ -1,0 +1,61 @@
+"""`SolveReport` — the one result schema every engine maps onto.
+
+The deprecated entry points each reported a different type
+(``MSFResult`` / ``DistMSFResult`` / ``CoarsenStats`` /
+``DistCoarsenStats`` / ``UpdateStats``); a :class:`SolveReport` carries
+the union of what callers actually consume — forest weight, the chosen
+global eids, component labels, iteration count, the per-level coarsening
+rows, and the two operational counters (host round-trips, recompiles) —
+plus the engine-native result under ``raw`` for anything mode-specific.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import numpy as np
+
+
+class SolveReport(NamedTuple):
+    """Uniform result of ``Plan.solve()`` (and ``Plan.update()``)."""
+
+    mode: str  # engine that produced this report
+    weight: float  # total forest weight
+    msf_eids: np.ndarray  # int32 [n_msf_edges] chosen edge ids, trimmed
+    parent: np.ndarray  # int32 [n] component representative per vertex
+    n_msf_edges: int
+    iterations: int  # hook/shortcut rounds (levels + residual)
+    levels: Tuple  # per-level LevelStats rows; () when no levels ran
+    host_roundtrips: int  # per-level host round-trips (0 = device-resident)
+    recompiles: int  # distinct executables compiled (stream mode)
+    raw: Any  # engine-native result (MSFResult / UpdateStats / ...)
+
+    @property
+    def n_components(self) -> int:
+        return int(len(np.unique(np.asarray(self.parent))))
+
+
+def _trim_eids(msf_eids, n_msf_edges) -> np.ndarray:
+    return np.asarray(msf_eids)[: int(n_msf_edges)].astype(np.int32)
+
+
+def report_from_msf_result(
+    mode: str,
+    r,
+    *,
+    levels: Tuple = (),
+    host_roundtrips: int = 0,
+    recompiles: int = 0,
+) -> SolveReport:
+    """Adapt an ``MSFResult``/``DistMSFResult``-shaped record."""
+    return SolveReport(
+        mode=mode,
+        weight=float(r.weight),
+        msf_eids=_trim_eids(r.msf_eids, r.n_msf_edges),
+        parent=np.asarray(r.parent),
+        n_msf_edges=int(r.n_msf_edges),
+        iterations=int(r.iterations),
+        levels=tuple(levels),
+        host_roundtrips=int(host_roundtrips),
+        recompiles=int(recompiles),
+        raw=r,
+    )

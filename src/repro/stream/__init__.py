@@ -1,6 +1,6 @@
 # Streaming MSF subsystem (DESIGN.md §6): incremental forest maintenance
 # via the sparsification identity + snapshot-isolated batched query serving.
-from repro.stream.engine import StreamingMSF, UpdateStats, DeleteStats
+from repro.stream.engine import StreamEngine, StreamingMSF, UpdateStats, DeleteStats
 from repro.stream.snapshot import Snapshot, SnapshotStore, make_snapshot
 from repro.stream.service import QueryService, MicroBatcher, next_pow2
 from repro.stream import delta

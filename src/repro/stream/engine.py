@@ -38,13 +38,15 @@ forest-only streaming (documented in DESIGN.md §6.4).
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import numpy as np
 
-from repro.core.msf import msf
+from repro.core.msf import flat_msf
 from repro.core.semiring import PACK_IDX_MASK
 from repro.graphs.structures import Graph
+from repro.solve.spec import weights_packable
 from repro.stream import delta
 from repro.stream.service import next_pow2
 from repro.stream.snapshot import SnapshotStore, make_snapshot
@@ -71,8 +73,13 @@ class DeleteStats(NamedTuple):
     compacted: bool
 
 
-class StreamingMSF:
+class StreamEngine:
     """Incremental MSF over an undirected edge stream.
+
+    This is the engine behind ``repro.solve``'s ``mode="stream"`` plans
+    (``plan(n, SolveSpec(mode="stream")).update/query/...``); the
+    :class:`StreamingMSF` name below is its deprecated direct-construction
+    shim.
 
     Parameters
     ----------
@@ -128,7 +135,7 @@ class StreamingMSF:
         capacity: int = 1 << 16,
     ):
         if n < 2:
-            raise ValueError("StreamingMSF needs n >= 2")
+            raise ValueError("the streaming MSF engine needs n >= 2")
         if batch_capacity < 1:
             raise ValueError("batch_capacity must be >= 1")
         self.n = int(n)
@@ -228,6 +235,13 @@ class StreamingMSF:
             self._w[idx].copy(),
             self._gid[idx].copy(),
         )
+
+    def forest_gids(self) -> np.ndarray:
+        """Stable gids of the live forest edges only — the cheap column
+        for per-update reporting (``repro.solve``'s stream reports build
+        one per batch; copying all four forest columns there would tax
+        the insert hot path)."""
+        return self._gid[np.flatnonzero(~self._dead[: self._count])]
 
     def insert_batch(self, u, v, w) -> UpdateStats:
         """Apply one batch of undirected weighted edge insertions.
@@ -352,10 +366,10 @@ class StreamingMSF:
         """Track packability and (if adaptive) resize the padded batch
         slots by powers of two off the observed batch sizes."""
         if pb.count:
-            wb = pb.w
-            ok = bool(
-                np.all(wb == np.floor(wb)) and wb.min() >= 0 and wb.max() <= 255
-            )
+            # The pack32 regime test lives in repro.solve.spec (shared
+            # with the coarsen auto-detect); here it is a running
+            # conjunction over the insert stream.
+            ok = weights_packable(pb.w)
             if not ok and self._pack is True:
                 raise ValueError(
                     "pack=True requires integral weights in [0, 255]; "
@@ -430,16 +444,14 @@ class StreamingMSF:
             r = eng(g)
             self.last_coarsen_stats = eng.last_stats
         else:
-            # "sorted" is a dedupe-only backend (coarsen path); the flat
-            # hook loop's segment ids are unsorted → degrade.
-            from repro.kernels.ops import flat_segmin_backend
-
-            flat_segmin = flat_segmin_backend(self._segmin)
+            # flat_msf's backend resolution (repro.solve.spec) degrades
+            # "sorted" — a dedupe-only backend — to "auto" for the flat
+            # hook loop's unsorted segment ids.
             self.last_coarsen_stats = None
-            r = msf(
+            r = flat_msf(
                 g,
                 pack=use_pack,
-                segmin=flat_segmin if use_pack else None,
+                segmin=self._segmin if use_pack else None,
                 **self._msf_opts,
             )
 
@@ -481,3 +493,30 @@ class StreamingMSF:
         self._live_keys = keys
         self._live_w = w_sorted
         self._live_rows = live[order] if len(live) else np.zeros(0, np.int64)
+
+
+class StreamingMSF(StreamEngine):
+    """Deprecated direct-construction shim over :class:`StreamEngine`.
+
+    .. deprecated::
+        Use the declarative API instead::
+
+            from repro.solve import SolveSpec, plan
+            p = plan(n, SolveSpec(mode="stream", batch_capacity=1024))
+            p.update(u, v, w)       # -> SolveReport
+            p.query(qu, qv)         # -> bool [k]
+
+        The shim is the same engine (same state layout, same snapshots,
+        bit-identical forests); it only adds this warning. It will be
+        removed once the deprecation window closes; see DESIGN.md §9.
+    """
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "StreamingMSF is deprecated; use repro.solve.plan(n, "
+            "SolveSpec(mode='stream', ...)) and its update()/query() "
+            "surfaces instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        super().__init__(*args, **kwargs)

@@ -1,0 +1,20 @@
+"""Tier-1 wrapper around the deprecated-entry-point lint (CI also runs
+``tools/check_deprecated_calls.py`` as a standalone build gate): no
+``src/`` module outside the shims may call ``msf`` / ``msf_weight`` /
+``msf_distributed`` / ``StreamingMSF`` / ``coarsen_msf`` — internal code
+routes through ``repro.solve`` so the shims stay thin and internal calls
+never trip the DeprecationWarning."""
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_src_free_of_deprecated_entry_point_calls():
+    sys.path.insert(0, str(_ROOT / "tools"))
+    try:
+        from check_deprecated_calls import check
+    finally:
+        sys.path.pop(0)
+    violations = check(_ROOT)
+    assert not violations, "\n".join(violations)

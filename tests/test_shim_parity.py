@@ -1,0 +1,168 @@
+"""Shim-parity suite: deprecated entry points ≡ the SolveSpec path.
+
+For every graph class the property suite exercises
+(``tests/test_msf_properties.py``: tie-heavy, multigraph, isolated,
+single-edge, empty, two-component, fully-contracted, float-weight),
+assert that
+
+- the deprecated ``msf(...)`` kwarg paths (flat, coarsen, fused) and the
+  deprecated ``msf_distributed(...)`` paths (flat driver and coarsen
+  driver — the dual-return shim) produce **identical** weight, MSF eid
+  set, and component partition to the equivalent ``SolveSpec`` plans;
+- each deprecated call emits **exactly one** ``DeprecationWarning``.
+
+This is the contract the tentpole promises: the old entry points are
+thin shims over ``repro.solve`` — bit-identical while they live, loud
+about their replacement.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import test_msf_properties as props
+from repro.coarsen import CoarsenConfig
+from repro.graphs.partition import partition_edges_2d
+from repro.solve import SolveSpec, plan
+
+_CFG = props._CFG  # the property suite's level config (cutoff=4)
+
+
+def _one_warning(fn, *args, **kw):
+    """Run fn, assert exactly one DeprecationWarning, return its result."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn(*args, **kw)
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, (
+        f"{getattr(fn, '__name__', fn)} emitted {len(deps)} "
+        f"DeprecationWarnings (expected exactly 1): "
+        f"{[str(w.message) for w in deps]}"
+    )
+    return out
+
+
+def _silent(fn, *args, **kw):
+    """Run fn asserting it emits NO DeprecationWarning (the spec path)."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn(*args, **kw)
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert not deps, f"spec path warned: {[str(w.message) for w in deps]}"
+    return out
+
+
+def _assert_identical(old, new, g, what: str):
+    assert float(old.weight) == float(new.weight), (
+        what, float(old.weight), float(new.weight),
+    )
+    assert props._eids(old) == set(np.asarray(new.msf_eids).tolist()), (
+        f"{what}: eid set drifted between shim and spec path"
+    )
+    assert props._same_partition(old.parent, new.parent), (
+        f"{what}: partitions disagree"
+    )
+
+
+def _check_graph(g, dist_mesh, dist_mesh_shape):
+    from repro.core.msf import msf
+    from repro.core.msf_dist import msf_distributed
+
+    flat_spec = _silent(lambda: plan(g, SolveSpec()).solve())
+    _assert_identical(_one_warning(msf, g), flat_spec, g, "flat")
+
+    co_spec = _silent(
+        lambda: plan(g, SolveSpec(mode="coarsen", coarsen=_CFG)).solve()
+    )
+    _assert_identical(_one_warning(msf, g, coarsen=_CFG), co_spec, g, "coarsen")
+
+    fu_spec = _silent(
+        lambda: plan(
+            g, SolveSpec(mode="coarsen", coarsen=_CFG, fused=True)
+        ).solve()
+    )
+    _assert_identical(
+        _one_warning(msf, g, coarsen=_CFG, fused=True), fu_spec, g, "fused"
+    )
+
+    rows, cols = dist_mesh_shape
+    part = partition_edges_2d(g, rows, cols)
+    args = (part.src_row, part.dst_col, part.w, part.eid, part.valid)
+
+    # dual-return shim, branch 1: no coarsen → jitted driver function
+    drv = _one_warning(msf_distributed, part, dist_mesh)
+    dist_spec = _silent(
+        lambda: plan(part, SolveSpec(mode="dist"), mesh=dist_mesh).solve()
+    )
+    _assert_identical(drv(*args), dist_spec, g, "dist")
+
+    # dual-return shim, branch 2: coarsen → DistCoarsenMSF driver
+    cfg = CoarsenConfig(
+        rounds_per_level=2, cutoff=4, fused=True, dedupe="device"
+    )
+    drv2 = _one_warning(msf_distributed, part, dist_mesh, coarsen=cfg)
+    dist_co_spec = _silent(
+        lambda: plan(
+            part, SolveSpec(mode="dist", coarsen=cfg), mesh=dist_mesh
+        ).solve()
+    )
+    _assert_identical(drv2(*args), dist_co_spec, g, "dist_coarsen")
+    assert drv2.last_stats.host_roundtrips == dist_co_spec.host_roundtrips
+
+
+@pytest.mark.parametrize(
+    "case", props._FIXED_CASES, ids=[c[0] for c in props._FIXED_CASES]
+)
+def test_shim_parity_fixed_cases(case, dist_mesh, dist_mesh_shape):
+    _check_graph(props._fixed_graph(*case), dist_mesh, dist_mesh_shape)
+
+
+def test_shim_parity_fully_contracted(dist_mesh, dist_mesh_shape):
+    n = 16
+    rng = np.random.default_rng(9)
+    u = np.arange(1, n)
+    v = np.array([rng.integers(0, k) for k in range(1, n)])
+    w = rng.integers(1, 4, n - 1).astype(np.float64)
+    _check_graph(props.from_edges(u, v, w, n), dist_mesh, dist_mesh_shape)
+
+
+def test_shim_parity_float_weights(dist_mesh, dist_mesh_shape):
+    n, m = 24, 90
+    rng = np.random.default_rng(11)
+    g = props.from_edges(
+        rng.integers(0, n, m), rng.integers(0, n, m), rng.random(m) + 0.25, n
+    )
+    _check_graph(g, dist_mesh, dist_mesh_shape)
+
+
+def test_streaming_shim_warns_once_and_matches_plan():
+    """StreamingMSF construction warns exactly once; the engine behind it
+    is bit-identical to a stream plan fed the same batches."""
+    from repro.stream import StreamEngine, StreamingMSF
+
+    rng = np.random.default_rng(3)
+    n, m, b = 64, 128, 32
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    w = rng.integers(1, 6, m).astype(np.float64)
+
+    shim = _one_warning(StreamingMSF, n, batch_capacity=b)
+    assert isinstance(shim, StreamEngine)  # same engine, not a fork
+    p = _silent(lambda: plan(n, SolveSpec(mode="stream", batch_capacity=b)))
+    rep = None
+    for k in range(0, m, b):
+        sl = slice(k, k + b)
+        shim.insert_batch(u[sl], v[sl], w[sl])
+        rep = p.update(u[sl], v[sl], w[sl])
+    assert shim.weight == rep.weight
+    assert shim.version == rep.raw.version
+    shim_gids = set(shim.forest_edges()[3].tolist())
+    assert shim_gids == set(rep.msf_eids.tolist())
+
+
+def test_msf_weight_shim_warns():
+    from repro.core.msf import msf_weight
+
+    g = props._fixed_graph(*props._FIXED_CASES[0])
+    want = plan(g, SolveSpec()).solve().weight
+    assert _one_warning(msf_weight, g) == want

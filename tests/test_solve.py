@@ -1,0 +1,347 @@
+"""Unit tests of the unified solver API (``repro.solve``, DESIGN.md §9).
+
+Covers: SolveSpec validation (the raise sites consolidated out of the
+engines), CoarsenConfig validation (segmin regression), resolve()
+auto-detection, the bounded plan cache (engine + executable reuse), the
+engine registry extension point, the SolveReport schema across modes,
+and the stream plan surfaces.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.coarsen import CoarsenConfig
+from repro.graphs.structures import from_edges
+from repro.solve import (
+    PLAN_CACHE_MAXSIZE,
+    SolveSpec,
+    clear_plan_cache,
+    plan,
+    plan_cache_info,
+    register_engine,
+)
+
+
+def _graph(n=32, m=64, seed=0, wlevels=5, float_w=False):
+    rng = np.random.default_rng(seed)
+    w = rng.random(m) + 0.25 if float_w else rng.integers(1, wlevels + 1, m)
+    return from_edges(
+        rng.integers(0, n, m), rng.integers(0, n, m), w.astype(np.float64), n
+    )
+
+
+# ---------------------------------------------------------------------------
+# SolveSpec validation — the consolidated raise sites
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_unknown_enums():
+    with pytest.raises(ValueError, match="unknown mode"):
+        SolveSpec(mode="bogus")
+    with pytest.raises(ValueError, match="unknown variant"):
+        SolveSpec(variant="bogus")
+    with pytest.raises(ValueError, match="shortcut"):
+        SolveSpec(shortcut="bogus")
+    with pytest.raises(ValueError, match="segmin"):
+        SolveSpec(segmin="bogus")
+    with pytest.raises(ValueError, match="dedupe"):
+        SolveSpec(dedupe="bogus")
+
+
+def test_spec_mode_specific_shortcuts():
+    # "baseline" is a distributed-only strategy; "complete" single-device.
+    with pytest.raises(ValueError, match="shortcut"):
+        SolveSpec(mode="flat", shortcut="baseline")
+    with pytest.raises(ValueError, match="shortcut"):
+        SolveSpec(mode="dist", shortcut="complete")
+    assert SolveSpec(mode="dist", shortcut="baseline").shortcut == "baseline"
+
+
+def test_spec_flat_rejects_fused_and_sorted():
+    with pytest.raises(ValueError, match="fused=True requires coarsen"):
+        SolveSpec(mode="flat", fused=True)
+    with pytest.raises(ValueError, match="sorted"):
+        SolveSpec(mode="flat", segmin="sorted")
+    with pytest.raises(ValueError, match="pack=True inner loop"):
+        SolveSpec(mode="flat", pack=False, segmin="pallas")
+    with pytest.raises(ValueError, match="mode='coarsen'"):
+        SolveSpec(mode="flat", coarsen=CoarsenConfig())
+
+
+def test_spec_coarsen_true_normalizes_and_hashes():
+    s = SolveSpec(mode="coarsen", coarsen=True)
+    assert isinstance(s.coarsen, CoarsenConfig)
+    # frozen + hashable: usable as a cache key
+    assert hash(s) == hash(SolveSpec(mode="coarsen", coarsen=CoarsenConfig()))
+    d = {s: 1}
+    assert d[SolveSpec(mode="coarsen", coarsen=CoarsenConfig())] == 1
+
+
+def test_coarsen_config_validates_segmin():
+    """Regression: an unknown segmin used to survive __post_init__ and
+    blow up only inside make_packed_segmin, deep in a level kernel."""
+    with pytest.raises(ValueError, match="segmin"):
+        CoarsenConfig(segmin="bogus")
+    with pytest.raises(ValueError, match="dedupe"):
+        CoarsenConfig(dedupe="bogus")
+    for ok in (None, "auto", "jnp", "pallas", "sorted"):
+        CoarsenConfig(segmin=ok)
+
+
+def test_spec_stream_static_validation():
+    with pytest.raises(ValueError, match="batch_capacity"):
+        SolveSpec(mode="stream", batch_capacity=0)
+    # pack=True union-eid overflow is data-dependent → resolve-time
+    big = SolveSpec(mode="stream", pack=True, batch_capacity=1 << 23)
+    with pytest.raises(ValueError, match="pack32 index field"):
+        big.resolve(1 << 23)
+
+
+def test_stream_resolve_keeps_pack_auto_for_graph_targets():
+    """Regression: stream mode must NOT auto-detect pack from a Graph
+    target's integral weights — the engine tracks packability per batch
+    and degrades near the pack32 bound; a data-probed pack=True used to
+    trip the union-overflow guard spuriously."""
+    g = _graph(seed=2)  # integral weights
+    rs = SolveSpec(mode="stream", batch_capacity=1 << 24).resolve(g)
+    assert rs.pack is None  # left to the engine's running conjunction
+    # and the overflow guard only fires for an explicit pack=True
+    SolveSpec(mode="stream", batch_capacity=1 << 24).resolve(g.n)
+
+
+def test_stream_plan_accepts_numpy_vertex_counts():
+    """Regression: StreamingMSF(np.int64(n)) worked; the plan target
+    must too (n often comes off array shapes / int32 fields)."""
+    p = plan(np.int64(32), SolveSpec(mode="stream", batch_capacity=8))
+    rep = p.update(np.arange(4), np.arange(1, 5), np.ones(4))
+    assert rep.n_msf_edges == 4
+
+
+def test_resolve_does_not_fold_pack_into_coarsen_config():
+    """Regression: the deprecated pack kwarg steered only the residual
+    solve; the levels keep config.pack (None = per-level auto)."""
+    g = _graph(seed=6)  # integral → levels auto-detect pack themselves
+    rs = SolveSpec(mode="coarsen", pack=False).resolve(g)
+    assert rs.pack is False  # residual honors the explicit knob
+    assert rs.coarsen.pack is None  # levels keep their own auto-detect
+
+
+# ---------------------------------------------------------------------------
+# resolve() — the centralized auto-detect
+# ---------------------------------------------------------------------------
+
+def test_resolve_auto_pack_from_graph_data():
+    g_int = _graph(seed=1)
+    g_float = _graph(seed=1, float_w=True)
+    assert SolveSpec().resolve(g_int).pack is True
+    assert SolveSpec().resolve(g_float).pack is False
+    # explicit pack wins over the data
+    assert SolveSpec(pack=False).resolve(g_int).pack is False
+
+
+def test_resolve_concrete_dedupe_and_shortcut():
+    rs = SolveSpec(mode="coarsen").resolve(_graph())
+    assert rs.dedupe in ("device", "host")
+    assert rs.shortcut == "complete"
+    assert SolveSpec(mode="dist").resolve(None).shortcut == "csp"
+
+
+def test_resolve_folds_spec_knobs_into_coarsen_config():
+    cfg = CoarsenConfig(cutoff=64)
+    rs = SolveSpec(
+        mode="coarsen", coarsen=cfg, fused=True, segmin="jnp", dedupe="host"
+    ).resolve(_graph())
+    assert rs.coarsen.fused is True
+    assert rs.coarsen.segmin == "jnp"
+    assert rs.coarsen.dedupe == "host"
+    assert rs.coarsen.cutoff == 64  # non-overridden fields survive
+    # without spec overrides the embedded config passes through untouched
+    rs2 = SolveSpec(mode="coarsen", coarsen=cfg).resolve(_graph())
+    assert rs2.coarsen == cfg
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_same_spec_same_shape_reuses_executable():
+    from repro.core.msf import _msf_jit
+
+    clear_plan_cache()
+    g = _graph(n=48, m=31, seed=3)
+    spec = SolveSpec(max_iters=37)  # unique static → fresh executable
+    p1 = plan(g, spec)
+    p1.solve()
+    warm_exec = _msf_jit._cache_size()
+    warm_plans = plan_cache_info()[0]
+    p2 = plan(g, spec)
+    assert p2._engine is p1._engine, "same (spec, shapes) must hit the cache"
+    p2.solve()
+    assert _msf_jit._cache_size() == warm_exec, "cache hit still re-traced"
+    assert plan_cache_info()[0] == warm_plans
+    # same shapes, different *data* resolving identically also hits
+    g_same = from_edges(
+        np.asarray(g.src[: g.num_directed_edges // 2]),
+        np.asarray(g.dst[: g.num_directed_edges // 2]),
+        np.asarray(g.w[: g.num_directed_edges // 2]) % 7 + 1,
+        g.n,
+    )
+    assert g_same.num_directed_edges == g.num_directed_edges
+    assert plan(g_same, spec)._engine is p1._engine
+
+
+def test_plan_cache_misses_on_shape_spec_or_resolution():
+    clear_plan_cache()
+    spec = SolveSpec(max_iters=37)
+    g = _graph(n=48, m=31, seed=3)
+    p1 = plan(g, spec)
+    assert plan(_graph(n=48, m=17, seed=3), spec)._engine is not p1._engine
+    assert plan(g, SolveSpec(max_iters=38))._engine is not p1._engine
+    # same shapes but float weights resolve pack differently → must miss
+    # (a shared engine would run pack32 kernels on float data)
+    g_float = _graph(n=48, m=31, seed=3, float_w=True)
+    p_f = plan(g_float, spec)
+    assert p_f._engine is not p1._engine
+    assert p_f.resolved.pack is False and p1.resolved.pack is True
+
+
+def test_plan_cache_is_bounded():
+    clear_plan_cache()
+    g = _graph(n=16, m=8)
+    for i in range(PLAN_CACHE_MAXSIZE + 16):
+        plan(g, SolveSpec(max_iters=1000 + i))  # build only, no solve
+    assert plan_cache_info()[0] <= PLAN_CACHE_MAXSIZE
+
+
+def test_stream_plans_are_not_cached():
+    clear_plan_cache()
+    spec = SolveSpec(mode="stream", batch_capacity=16)
+    p1, p2 = plan(64, spec), plan(64, spec)
+    assert p1._engine is not p2._engine, "stream engines are stateful"
+    assert plan_cache_info()[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+
+def test_register_engine_extension_point():
+    from repro.solve import planner
+    from repro.solve import spec as spec_mod
+
+    seen = {}
+
+    class _Echo:
+        def __init__(self, rs):
+            self.rs = rs
+
+        def solve(self, target, **kw):
+            seen["target"] = target
+            return ("echo", self.rs.spec.mode)
+
+    register_engine("echo", lambda t, rs, mesh: _Echo(rs))
+    try:
+        s = SolveSpec(mode="echo")  # registered modes become legal specs
+        assert plan(_graph(), s).solve() == ("echo", "echo")
+        assert seen["target"].n == 32
+        assert "echo" in planner.registered_modes()
+    finally:
+        planner._engines.pop("echo", None)
+        spec_mod.EXTRA_MODES.discard("echo")
+    with pytest.raises(ValueError, match="unknown mode"):
+        SolveSpec(mode="echo")
+
+
+def test_plan_unknown_mode_and_missing_mesh_errors():
+    with pytest.raises(ValueError, match="needs a mesh"):
+        plan(None, SolveSpec(mode="dist"))
+
+
+# ---------------------------------------------------------------------------
+# SolveReport schema across modes
+# ---------------------------------------------------------------------------
+
+def test_report_schema_flat_vs_coarsen():
+    g = _graph(n=64, m=160, seed=7)
+    flat = plan(g, SolveSpec()).solve()
+    co = plan(
+        g, SolveSpec(mode="coarsen", coarsen=CoarsenConfig(cutoff=4))
+    ).solve()
+    assert flat.mode == "flat" and co.mode == "coarsen"
+    for rep in (flat, co):
+        assert isinstance(rep.weight, float)
+        assert rep.msf_eids.shape == (rep.n_msf_edges,)  # trimmed, no padding
+        assert rep.parent.shape == (g.n,)
+        assert rep.host_roundtrips >= 0 and rep.recompiles >= 0
+    assert flat.levels == ()
+    assert len(co.levels) >= 1
+    assert abs(flat.weight - co.weight) < 1e-3
+    assert set(flat.msf_eids.tolist()) == set(co.msf_eids.tolist())
+    assert flat.n_components == co.n_components
+
+
+def test_report_dist_mode(dist_mesh, dist_mesh_shape):
+    from repro.graphs.partition import partition_edges_2d
+
+    g = _graph(n=48, m=128, seed=5)
+    part = partition_edges_2d(g, *dist_mesh_shape)
+    rep = plan(part, SolveSpec(mode="dist"), mesh=dist_mesh).solve()
+    flat = plan(g, SolveSpec()).solve()
+    assert rep.mode == "dist"
+    assert abs(rep.weight - flat.weight) < 1e-3
+    assert set(rep.msf_eids.tolist()) == set(flat.msf_eids.tolist())
+    cfg = CoarsenConfig(cutoff=4, fused=True, dedupe="device")
+    rep2 = plan(
+        part, SolveSpec(mode="dist", coarsen=cfg), mesh=dist_mesh
+    ).solve()
+    assert rep2.host_roundtrips == 0
+    assert set(rep2.msf_eids.tolist()) == set(flat.msf_eids.tolist())
+
+
+def test_stream_plan_surfaces():
+    rng = np.random.default_rng(11)
+    n, m = 128, 256
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    w = rng.integers(1, 8, m).astype(np.float64)
+    p = plan(n, SolveSpec(mode="stream", batch_capacity=64))
+    rep = None
+    for k in range(0, m, 64):
+        rep = p.update(u[k : k + 64], v[k : k + 64], w[k : k + 64])
+    assert rep.mode == "stream"
+    flat = plan(from_edges(u, v, w, n), SolveSpec()).solve()
+    assert abs(rep.weight - flat.weight) <= max(1.0, 1e-6 * flat.weight)
+    assert rep.recompiles >= 1
+    assert rep.raw.version == p._engine.engine.version
+    conn = p.query(u[:16], v[:16])
+    assert conn.shape == (16,) and conn.dtype == bool
+    assert conn.all()  # inserted endpoints are connected
+    # update()/query() are stream-only surfaces
+    with pytest.raises(ValueError, match="stream-mode"):
+        plan(_graph(), SolveSpec()).update(u, v, w)
+    # solve() on a stream plan reports current state without recompute
+    state = p.solve()
+    assert state.weight == rep.weight
+    assert state.n_msf_edges == rep.n_msf_edges
+
+
+def test_stream_plan_delete_and_compact():
+    p = plan(32, SolveSpec(mode="stream", batch_capacity=16))
+    u = np.arange(0, 8)
+    v = np.arange(1, 9)
+    p.update(u, v, np.ones(8))
+    rep = p.delete(u[:2], v[:2])
+    assert rep.n_msf_edges == 6
+    rep2 = p.compact()
+    assert rep2.n_msf_edges == 6
+    assert rep2.weight == 6.0
+
+
+def test_plan_overrides_shorthand():
+    g = _graph(n=32, m=64, seed=13)
+    rep = plan(g, mode="coarsen", coarsen=CoarsenConfig(cutoff=4)).solve()
+    flat = plan(g).solve()
+    assert abs(rep.weight - flat.weight) < 1e-3
+    base = SolveSpec()
+    p = plan(g, base, variant="paper")
+    assert p.spec.variant == "paper"

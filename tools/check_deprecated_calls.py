@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Lint: no ``src/`` module outside the shims may call a deprecated
+entry point (``msf``, ``msf_weight``, ``msf_distributed``,
+``StreamingMSF``, ``coarsen_msf``).
+
+The deprecated names stay importable for external callers, but internal
+code must go through ``repro.solve`` (or the internal builders the solve
+engines use) — otherwise every internal call would emit the shim's
+``DeprecationWarning`` and the "shims are thin" invariant would quietly
+rot. A plain ``grep`` false-positives on the many docstrings that show
+the historical call patterns, so this walks the AST and flags only real
+``Call`` nodes (by bare name or attribute, e.g. ``module.msf(...)``).
+
+Exits 1 with a file:line listing when a violation exists. Wired into CI
+and ``tests/test_no_deprecated_calls.py`` (tier-1).
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+DEPRECATED = {"msf", "msf_weight", "msf_distributed", "StreamingMSF", "coarsen_msf"}
+
+#: The shim modules themselves (definitions + their mutual delegation,
+#: e.g. ``msf_weight`` → ``msf``) — everything else in src/ is checked.
+ALLOWED = {
+    Path("src/repro/core/msf.py"),
+    Path("src/repro/core/msf_dist.py"),
+    Path("src/repro/stream/engine.py"),
+    Path("src/repro/coarsen/engine.py"),  # defines the coarsen_msf shim
+}
+
+
+def _call_name(node: ast.Call) -> str | None:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def check(root: Path) -> list[str]:
+    violations = []
+    for path in sorted((root / "src").rglob("*.py")):
+        rel = path.relative_to(root)
+        if rel in ALLOWED:
+            continue
+        tree = ast.parse(path.read_text(), filename=str(rel))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                name = _call_name(node)
+                if name in DEPRECATED:
+                    violations.append(
+                        f"{rel}:{node.lineno}: call to deprecated entry "
+                        f"point {name}(...) — route through repro.solve"
+                    )
+    return violations
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    violations = check(root)
+    if violations:
+        print("\n".join(violations))
+        print(
+            f"\n{len(violations)} deprecated entry-point call(s) in src/ "
+            f"outside the shims ({', '.join(str(p) for p in sorted(ALLOWED))})"
+        )
+        return 1
+    print("OK: src/ is free of deprecated entry-point calls outside the shims")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
