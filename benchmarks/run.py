@@ -1,8 +1,14 @@
 """Benchmark driver — one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV rows (benchmarks/bench_*.py each map to a
-paper figure; the roofline/§Perf numbers come from launch/dryrun.py)."""
+paper figure; the roofline/§Perf numbers come from launch/dryrun.py).
+
+``--metrics-summary`` turns ``repro.obs`` metrics mode on for the whole
+run and prints the registry snapshot (counters + span-latency summaries)
+to stderr after each registered bench, resetting between benches so each
+snapshot is per-bench."""
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -18,6 +24,12 @@ def main() -> None:
         bench_strong_scaling,
         bench_weak_scaling,
     )
+
+    metrics = "--metrics-summary" in sys.argv[1:]
+    if metrics:
+        from repro import obs
+
+        obs.enable("metrics")
 
     mods = [
         ("fig3/4-shortcut", bench_shortcut),
@@ -35,6 +47,15 @@ def main() -> None:
         for r in mod.run_rows():
             print(r, flush=True)
         print(f"# {label} done in {time.time()-t0:.0f}s", file=sys.stderr)
+        if metrics:
+            from repro import obs
+
+            print(
+                f"# metrics[{label}]: "
+                + json.dumps(obs.metrics_snapshot(), sort_keys=True),
+                file=sys.stderr,
+            )
+            obs.metrics_reset()
 
 
 if __name__ == "__main__":

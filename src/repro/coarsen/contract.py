@@ -36,14 +36,14 @@ class ContractResult(NamedTuple):
     n_msf_edges: jax.Array  # int32 scalar
 
 
-def contract_rounds(reduce_fn, n: int, rounds: int) -> ContractResult:
-    """Shared K-round hook+shortcut driver; ``reduce_fn(p)`` yields the
-    per-root MINWEIGHT EdgeMin for the current parent vector.
+def hook_rounds(reduce_fn, n: int, rounds: int):
+    """K hook+shortcut rounds from singleton stars, *without* the
+    rank/relabel tail: ``(parent, weight, msf_eids, n_msf_edges)``.
 
-    Public: the distributed fused level (``repro.coarsen.dist``) runs the
-    same rounds inside ``shard_map`` with a cross-device reduce_fn — all
-    the per-round bookkeeping (hook, tie-break, eid recording, shortcut,
-    rank/relabel) operates on replicated dense vectors and is shared."""
+    Split out of :func:`contract_rounds` so obs trace mode can run the
+    contraction and the relabel as separately-timed executables
+    (``repro.coarsen.engine`` DESIGN.md §10.3) — both paths compose the
+    identical pieces."""
     p = jnp.arange(n, dtype=jnp.int32)
     total = jnp.float32(0.0)
     msf_eids = jnp.full((n,), IMAX, jnp.int32)
@@ -54,6 +54,18 @@ def contract_rounds(reduce_fn, n: int, rounds: int) -> ContractResult:
         total = total + jnp.sum(jnp.where(keep, r.w, 0.0))
         msf_eids, n_f = record_edges(msf_eids, n_f, keep, r.eid)
         p = sc.complete_shortcut(p_h)
+    return p, total, msf_eids, n_f
+
+
+def contract_rounds(reduce_fn, n: int, rounds: int) -> ContractResult:
+    """Shared K-round hook+shortcut driver; ``reduce_fn(p)`` yields the
+    per-root MINWEIGHT EdgeMin for the current parent vector.
+
+    Public: the distributed fused level (``repro.coarsen.dist``) runs the
+    same rounds inside ``shard_map`` with a cross-device reduce_fn — all
+    the per-round bookkeeping (hook, tie-break, eid recording, shortcut,
+    rank/relabel) operates on replicated dense vectors and is shared."""
+    p, total, msf_eids, n_f = hook_rounds(reduce_fn, n, rounds)
     new_ids, n_next = rank_relabel(p)
     return ContractResult(
         parent=p,

@@ -54,6 +54,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.compat import shard_map
 from repro.coarsen.contract import contract_rounds, make_und_reduce
 from repro.coarsen.config import CoarsenConfig
@@ -67,6 +68,20 @@ from repro.graphs.partition import Partition2D, block_global_ids
 from repro.solve.spec import auto_pack, resolve_dedupe, resolve_level_segmins
 
 _IMAX_NP = np.int32(np.iinfo(np.int32).max)
+
+
+def _account_allreduce(rounds: int, n_pad: int, pack: bool) -> None:
+    """Analytic all-reduce volume of ``rounds`` cross-device contract
+    rounds over a dense [n_pad] accumulator: the pack path combines two
+    dense passes per round (packed minkey + payload), the float path
+    three (minw, mineid, payload) — exactly the ``combine`` call sites of
+    :func:`make_und_reduce`. Host-side schedule accounting, not a device
+    measurement: the counters mirror what the compiled program does."""
+    if not obs.metrics_active():
+        return
+    passes = (2 if pack else 3) * rounds
+    obs.counter("dist.allreduce.passes").inc(passes)
+    obs.counter("dist.allreduce.elements").inc(passes * n_pad)
 
 
 class DistCoarsenStats(NamedTuple):
@@ -324,7 +339,10 @@ class DistCoarsenMSF:
                 *mesh_key, n_pad, eid_cap, cfg.rounds_per_level, use_pack,
                 segmin_hook, segmin_dedupe, in_mesh,
             )
-            out = drv(lo, hi, w_b, eid_b, valid_b, label_map)
+            with obs.span("dist.level", level=len(stats), n=n_cur,
+                          m=m_cur) as lsp:
+                out = lsp.attach(drv(lo, hi, w_b, eid_b, valid_b, label_map))
+            _account_allreduce(cfg.rounds_per_level, n_pad, use_pack)
             n_next = int(out[7]) - (n_pad - n_cur)  # drop padding roots
             if n_next == n_cur:  # every component already complete
                 break
@@ -359,7 +377,12 @@ class DistCoarsenMSF:
         rdrv = _residual_driver(
             *mesh_key, n_res_pad, eid_cap, use_pack, segmin_hook, limit
         )
-        p_res, r_weight, r_eids, r_nf, r_it = rdrv(lo, hi, w_b, eid_b, valid_b)
+        with obs.span("dist.residual", n=n_cur, m=m_cur) as rsp:
+            p_res, r_weight, r_eids, r_nf, r_it = rsp.attach(
+                rdrv(lo, hi, w_b, eid_b, valid_b)
+            )
+        # Residual rounds run the same per-round combine schedule.
+        _account_allreduce(int(r_it), n_res_pad, use_pack)
 
         all_eids = np.concatenate(
             eids_acc + [np.asarray(r_eids[: int(r_nf)])]

@@ -88,42 +88,18 @@ def record_edges(msf_eids, n_f, keep, r_eid):
     return msf_eids, n_f + jnp.sum(keep.astype(jnp.int32))
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "variant",
-        "shortcut",
-        "capacity",
-        "max_iters",
-        "unroll_guard",
-        "pack",
-        "segmin",
-    ),
-)
-def _msf_jit(
-    graph: Graph,
-    *,
-    parent0: jax.Array | None = None,
-    variant: str = "complete",
-    shortcut: str = "complete",
-    capacity: int = 1 << 16,
-    max_iters: int | None = None,
-    unroll_guard: bool = True,
-    pack: bool = False,
-    segmin=None,
-) -> MSFResult:
-    """Jitted MSF driver — see :func:`msf` for the public entry point."""
+def _make_msf_body(graph: Graph, variant, shortcut_fn, pack, segmin):
+    """One hook+shortcut round as ``body(state) -> state`` over the
+    6-tuple ``(p, total, msf_eids, n_f, it, done)``.
+
+    Shared by the jitted while_loop driver (:func:`_msf_jit`) and the
+    host-driven traced driver (:func:`_msf_traced`), so the two paths run
+    the *same* per-round computation — the obs parity contract (enabling
+    tracing never changes solver output) reduces to "one round is one
+    round" regardless of who owns the loop.
+    """
     n = graph.n
     src, dst, w, eid, valid = graph.src, graph.dst, graph.w, graph.eid, graph.valid
-    if parent0 is None:
-        p0 = jnp.arange(n, dtype=jnp.int32)
-    else:
-        # Canonicalize: the hooking kernels rely on the every-tree-a-star
-        # invariant at the top of each iteration.
-        p0 = sc.complete_shortcut(parent0.astype(jnp.int32))
-    limit = jnp.int32(max_iters if max_iters is not None else 2 * int(n).bit_length() + 8)
-
-    shortcut_fn = sc.make_shortcut_fn(shortcut, capacity) if variant != "paper" else None
 
     def body_complete(state):
         p, total, msf_eids, n_f, it, _ = state
@@ -175,24 +151,146 @@ def _msf_jit(
         done = jnp.all(p_next == p_prev)
         return p_next, total, msf_eids, n_f, it + 1, done
 
-    body = body_paper if variant == "paper" else body_complete
+    return body_paper if variant == "paper" else body_complete
+
+
+def _msf_init(graph: Graph, parent0):
+    if parent0 is None:
+        p0 = jnp.arange(graph.n, dtype=jnp.int32)
+    else:
+        # Canonicalize: the hooking kernels rely on the every-tree-a-star
+        # invariant at the top of each iteration.
+        p0 = sc.complete_shortcut(parent0.astype(jnp.int32))
+    return (
+        p0,
+        jnp.float32(0.0),
+        jnp.full((graph.n,), IMAX, jnp.int32),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.bool_(False),
+    )
+
+
+def _msf_limit(n: int, max_iters) -> int:
+    return int(max_iters if max_iters is not None else 2 * int(n).bit_length() + 8)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "variant",
+        "shortcut",
+        "capacity",
+        "max_iters",
+        "unroll_guard",
+        "pack",
+        "segmin",
+    ),
+)
+def _msf_jit(
+    graph: Graph,
+    *,
+    parent0: jax.Array | None = None,
+    variant: str = "complete",
+    shortcut: str = "complete",
+    capacity: int = 1 << 16,
+    max_iters: int | None = None,
+    unroll_guard: bool = True,
+    pack: bool = False,
+    segmin=None,
+) -> MSFResult:
+    """Jitted MSF driver — see :func:`msf` for the public entry point."""
+    limit = jnp.int32(_msf_limit(graph.n, max_iters))
+    shortcut_fn = sc.make_shortcut_fn(shortcut, capacity) if variant != "paper" else None
+    body = _make_msf_body(graph, variant, shortcut_fn, pack, segmin)
 
     def cond(state):
         _, _, _, _, it, done = state
         guard = it < limit if unroll_guard else True
         return jnp.logical_and(~done, guard)
 
-    init = (
-        p0,
-        jnp.float32(0.0),
-        jnp.full((n,), IMAX, jnp.int32),
-        jnp.int32(0),
-        jnp.int32(0),
-        jnp.bool_(False),
-    )
+    init = _msf_init(graph, parent0)
     p, total, msf_eids, n_f, it, _ = jax.lax.while_loop(cond, body, init)
     p = sc.complete_shortcut(p)  # canonical labels (complete variant: no-op)
     return MSFResult(weight=total, parent=p, msf_eids=msf_eids, n_msf_edges=n_f, iterations=it)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("variant", "shortcut", "capacity", "pack", "segmin"),
+)
+def _msf_round(
+    graph: Graph,
+    state,
+    *,
+    variant: str,
+    shortcut: str,
+    capacity: int,
+    pack: bool,
+    segmin=None,
+):
+    """One hook+shortcut round as its own executable — the traced
+    driver's per-round step (the while_loop body, loop hoisted out)."""
+    shortcut_fn = sc.make_shortcut_fn(shortcut, capacity) if variant != "paper" else None
+    return _make_msf_body(graph, variant, shortcut_fn, pack, segmin)(state)
+
+
+def _msf_traced(
+    graph: Graph,
+    *,
+    parent0=None,
+    variant: str = "complete",
+    shortcut: str = "complete",
+    capacity: int = 1 << 16,
+    max_iters: int | None = None,
+    unroll_guard: bool = True,
+    pack: bool = False,
+    segmin=None,
+) -> MSFResult:
+    """Host-driven twin of :func:`_msf_jit` with one obs span per
+    hook/shortcut round (DESIGN.md §10.3).
+
+    A ``lax.while_loop`` hides the per-round timing from the host, so
+    trace mode moves the loop to Python: the same body
+    (:func:`_make_msf_body`) runs as one executable per round
+    (:func:`_msf_round`) with a ``msf.round`` span — device-synced via
+    ``attach`` — around each. Same rounds, same termination rule
+    (``done`` then the unroll guard), bit-identical result; the cost is
+    one dispatch + sync per round, which is exactly what a profiler is
+    allowed to spend.
+    """
+    from repro import obs
+
+    limit = _msf_limit(graph.n, max_iters)
+    state = _msf_init(graph, parent0)
+    with obs.span("msf.flat", n=graph.n, variant=variant) as sp:
+        while not bool(state[5]) and (
+            not unroll_guard or int(state[4]) < limit
+        ):
+            with obs.span("msf.round", round=int(state[4])) as rsp:
+                state = rsp.attach(_msf_round(
+                    graph, state,
+                    variant=variant, shortcut=shortcut, capacity=capacity,
+                    pack=pack, segmin=segmin,
+                ))
+        p = sp.attach(sc.complete_shortcut(state[0]))
+        sp.set(iterations=int(state[4]))
+    return MSFResult(
+        weight=state[1], parent=p, msf_eids=state[2],
+        n_msf_edges=state[3], iterations=state[4],
+    )
+
+
+def run_flat(graph: Graph, **kw) -> MSFResult:
+    """Flat-driver dispatch for callers holding a *resolved* segmin
+    callable (the ``repro.solve`` flat engine, :func:`flat_msf`):
+    the jitted while_loop driver normally, the span-per-round host
+    driver when obs trace mode is active."""
+    from repro import obs
+
+    if obs.trace_active():
+        return _msf_traced(graph, **kw)
+    return _msf_jit(graph, **kw)
 
 
 def flat_msf(graph: Graph, *, pack: bool = False, segmin: str | None = None,
@@ -208,7 +306,7 @@ def flat_msf(graph: Graph, *, pack: bool = False, segmin: str | None = None,
     """
     from repro.solve.spec import resolve_flat_segmin  # lazy: layer cycle
 
-    return _msf_jit(graph, pack=pack, segmin=resolve_flat_segmin(segmin, pack), **kw)
+    return run_flat(graph, pack=pack, segmin=resolve_flat_segmin(segmin, pack), **kw)
 
 
 def msf(

@@ -36,15 +36,26 @@ def main():
     ap.add_argument("--delete-every", type=int, default=0,
                     help="if >0, tombstone a small batch after every k-th insert")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="export a Chrome-trace/Perfetto JSON of the run")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="K",
+                    help="if >0, dump the obs metrics snapshot (incl. "
+                         "query-latency p50/p95/p99) every K batches")
     args = ap.parse_args()
     if args.batch_size < 1:
         ap.error("--batch-size must be >= 1")
     if args.queries_per_batch < 1:
         ap.error("--queries-per-batch must be >= 1")
 
+    from repro import obs
     from repro.graphs.generators import rmat_graph
     from repro.graphs.structures import from_edges
     from repro.solve import SolveSpec, plan
+
+    if args.trace:
+        obs.enable("trace")
+    elif args.metrics_every:
+        obs.enable("metrics")
 
     n = 1 << args.scale
     g_full = rmat_graph(args.scale, args.edge_factor, seed=args.seed)
@@ -84,6 +95,19 @@ def main():
                 f"ncc={rep.n_components} update={up_lat[-1] * 1e3:.1f}ms "
                 f"queries={q_tp[-1] / 1e6:.2f}M/s"
             )
+        if args.metrics_every and (k + 1) % args.metrics_every == 0:
+            snap = obs.metrics_snapshot()["histograms"]
+            qs = snap.get("span.stream.query")
+            us = snap.get("span.stream.update")
+            parts = [f"# metrics @batch {k}:"]
+            for tag, s in (("query", qs), ("update", us)):
+                if s:
+                    parts.append(
+                        f"{tag} p50={s['p50'] * 1e3:.2f}ms "
+                        f"p95={s['p95'] * 1e3:.2f}ms "
+                        f"p99={s['p99'] * 1e3:.2f}ms n={s['count']}"
+                    )
+            print(" ".join(parts))
 
     lat = np.asarray(up_lat[1:] or up_lat)  # drop the compile call
     print(
@@ -93,6 +117,10 @@ def main():
     )
     print(f"queries: median {np.median(q_tp) / 1e6:.2f}M/s "
           f"(batch={args.queries_per_batch})")
+    if args.trace:
+        obs.export_trace(args.trace)
+        print(f"# trace written to {args.trace} "
+              f"({len(obs.trace_events())} spans) — open in ui.perfetto.dev")
 
     if not args.delete_every:
         full = plan(

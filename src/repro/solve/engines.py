@@ -28,10 +28,10 @@ class _FlatEngine:
         self._rs = rs
 
     def solve(self, graph, parent0=None) -> SolveReport:
-        from repro.core.msf import _msf_jit
+        from repro.core.msf import run_flat
 
         rs, s = self._rs, self._rs.spec
-        r = _msf_jit(
+        r = run_flat(
             graph,
             parent0=parent0,
             variant=s.variant,

@@ -31,6 +31,7 @@ from typing import Any, Callable, NamedTuple
 
 import numpy as np
 
+from repro import obs
 from repro.solve.report import SolveReport
 from repro.solve.spec import MODES, ResolvedSpec, SolveSpec
 
@@ -148,20 +149,30 @@ def plan(target, spec: SolveSpec | None = None, *, mesh=None, **overrides) -> "P
         )
     if spec.mode == "dist" and mesh is None:
         raise ValueError("mode='dist' needs a mesh= (jax Mesh over the 2D grid)")
-    resolved = spec.resolve(target)
-    engine = None
-    key = None
-    if edef.cacheable:
-        # The key carries the *resolved* spec (concrete pack/segmin/dedupe
-        # choices), not just the user spec: two same-shape targets whose
-        # data resolves differently (e.g. integral vs float weights under
-        # pack=None) must not share an engine.
-        key = (resolved, _shape_key(target), mesh)
-        engine = _cache_get(key)
-    if engine is None:
-        engine = edef.builder(target, resolved, mesh)
-        if key is not None:
-            _cache_put(key, engine)
+    with obs.enabled(spec.obs):
+        with obs.span("plan.resolve", mode=spec.mode):
+            resolved = spec.resolve(target)
+        engine = None
+        key = None
+        if edef.cacheable:
+            # The key carries the *resolved* spec (concrete pack/segmin/
+            # dedupe choices), not just the user spec: two same-shape
+            # targets whose data resolves differently (e.g. integral vs
+            # float weights under pack=None) must not share an engine.
+            key = (resolved, _shape_key(target), mesh)
+            engine = _cache_get(key)
+            if obs.metrics_active():
+                obs.counter(
+                    "plan.cache.hit" if engine is not None
+                    else "plan.cache.miss"
+                ).inc()
+        if engine is None:
+            # The compile span: builders construct/trace the jitted
+            # drivers (dist mode traces the whole shard_map program here).
+            with obs.span("plan.build", mode=spec.mode):
+                engine = edef.builder(target, resolved, mesh)
+            if key is not None:
+                _cache_put(key, engine)
     return Plan(spec=spec, resolved=resolved, target=target, mesh=mesh, engine=engine)
 
 
@@ -198,12 +209,29 @@ class Plan:
         is still ``solve()``/``update()``/``query()``."""
         return getattr(self._engine, "engine", self._engine)
 
+    def _observed(self, what: str, call):
+        """Run one engine call under this spec's ``obs`` scope: a
+        ``solve.<mode>[.<what>]`` span, and — for SolveReport-shaped
+        results — the per-phase ``timings`` aggregation. The fully-off
+        path (global mode off, spec knob off) is two attribute checks."""
+        if not obs.metrics_active() and self.spec.obs == "off":
+            return call()
+        name = f"solve.{self.spec.mode}" + (f".{what}" if what else "")
+        with obs.enabled(self.spec.obs):
+            with obs.collect_timings() as t, obs.span(name):
+                rep = call()
+            if t and isinstance(rep, SolveReport):
+                rep = rep._replace(timings=dict(t))
+        return rep
+
     def solve(self, *args, **kw) -> SolveReport:
         """Run the full solve for this plan's target. Dist plans accept
         the five block arrays positionally to override the target's own
         (the deprecated driver call pattern); flat plans accept
         ``parent0=`` for warm starts."""
-        return self._engine.solve(self.target, *args, **kw)
+        return self._observed(
+            "", lambda: self._engine.solve(self.target, *args, **kw)
+        )
 
     # -- stream-mode surfaces -------------------------------------------
 
@@ -217,20 +245,24 @@ class Plan:
 
     def update(self, u, v, w) -> SolveReport:
         """Stream mode: apply one batch of edge insertions."""
-        return self._stream().update(u, v, w)
+        eng = self._stream()
+        return self._observed("update", lambda: eng.update(u, v, w))
 
     def delete(self, u, v) -> SolveReport:
         """Stream mode: tombstone a batch of edges."""
-        return self._stream().delete(u, v)
+        eng = self._stream()
+        return self._observed("delete", lambda: eng.delete(u, v))
 
     def query(self, u, v):
         """Stream mode: batched connectivity queries against the latest
         published snapshot; returns a bool array."""
-        return self._stream().query(u, v)
+        eng = self._stream()
+        return self._observed("query", lambda: eng.query(u, v))
 
     def compact(self) -> SolveReport:
         """Stream mode: drop tombstones and rebuild the forest."""
-        return self._stream().compact()
+        eng = self._stream()
+        return self._observed("compact", lambda: eng.compact())
 
     def __repr__(self):
         return (

@@ -5,12 +5,14 @@ The deprecated entry points each reported a different type
 ``DistCoarsenStats`` / ``UpdateStats``); a :class:`SolveReport` carries
 the union of what callers actually consume — forest weight, the chosen
 global eids, component labels, iteration count, the per-level coarsening
-rows, and the two operational counters (host round-trips, recompiles) —
-plus the engine-native result under ``raw`` for anything mode-specific.
+rows, the two operational counters (host round-trips, recompiles), and
+the per-phase wall-clock breakdown (``timings``, filled when the spec's
+``obs`` knob is on — DESIGN.md §10) — plus the engine-native result
+under ``raw`` for anything mode-specific.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import numpy as np
 
@@ -28,10 +30,28 @@ class SolveReport(NamedTuple):
     host_roundtrips: int  # per-level host round-trips (0 = device-resident)
     recompiles: int  # distinct executables compiled (stream mode)
     raw: Any  # engine-native result (MSFResult / UpdateStats / ...)
+    timings: Dict[str, float] = {}  # span name -> seconds; {} when obs off
 
     @property
     def n_components(self) -> int:
-        return int(len(np.unique(np.asarray(self.parent))))
+        """Component count from *canonical roots* — the number of
+        vertices satisfying ``parent[v] == v`` after pointer-jumping the
+        vector to fixpoint. Counting ``np.unique(parent)`` directly
+        over-reports on non-canonical labelings (a chain ``2 → 1 → 0``
+        has two distinct parent values but one component), and nothing
+        in the engine contract promises canonical output."""
+        return int(np.count_nonzero(_canonicalize(self.parent)
+                                    == np.arange(len(self.parent))))
+
+
+def _canonicalize(parent) -> np.ndarray:
+    """Pointer-jump a parent vector to its root fixpoint (host-side)."""
+    p = np.asarray(parent)
+    while True:
+        gp = p[p]
+        if np.array_equal(gp, p):
+            return p
+        p = gp
 
 
 def _trim_eids(msf_eids, n_msf_edges) -> np.ndarray:

@@ -41,6 +41,12 @@ import numpy as np
 from repro.core.semiring import PACK_IDX_MASK
 
 MODES = ("flat", "coarsen", "dist", "stream")
+#: Observability levels of the ``obs`` knob (DESIGN.md §10): "off" = the
+#: one-branch no-op path, "metrics" = span-duration histograms + counters
+#: in the process-global registry, "trace" = additionally record Chrome-
+#: trace events (and take per-phase device-sync'd code paths where a
+#: fused executable would otherwise hide the phases).
+OBS_MODES = ("off", "metrics", "trace")
 #: Modes added by ``repro.solve.register_engine`` beyond the built-ins.
 #: Mode-specific validation below only applies to the built-in modes; a
 #: registered engine owns its own validation.
@@ -175,6 +181,10 @@ class SolveSpec:
     # dist mode
     row_axis: str = "data"
     col_axis: str = "model"
+    # observability: "off" | "metrics" | "trace" (DESIGN.md §10). Scoped
+    # around every Plan.solve()/update()/query() of this spec; "trace"
+    # also fills SolveReport.timings and the exportable trace buffer.
+    obs: str = "off"
 
     def __post_init__(self):
         from repro.coarsen.config import (
@@ -185,6 +195,12 @@ class SolveSpec:
 
         if self.mode not in MODES and self.mode not in EXTRA_MODES:
             raise ValueError(f"unknown mode {self.mode!r} (expected one of {MODES})")
+        # obs is infrastructure, not engine policy — validated for
+        # registered modes too (the plan layer applies it uniformly).
+        if self.obs not in OBS_MODES:
+            raise ValueError(
+                f"unknown obs mode {self.obs!r} (expected one of {OBS_MODES})"
+            )
         if self.coarsen is True:  # convenience: True → defaults
             object.__setattr__(self, "coarsen", CoarsenConfig())
         if self.coarsen is not None and not isinstance(self.coarsen, CoarsenConfig):

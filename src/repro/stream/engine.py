@@ -43,6 +43,7 @@ from typing import NamedTuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.msf import flat_msf
 from repro.core.semiring import PACK_IDX_MASK
 from repro.graphs.structures import Graph
@@ -50,6 +51,22 @@ from repro.solve.spec import weights_packable
 from repro.stream import delta
 from repro.stream.service import next_pow2
 from repro.stream.snapshot import SnapshotStore, make_snapshot
+
+
+def _spanned(name):
+    """Wrap a method in an ``obs.span(name)`` — the per-op latency
+    surface of DESIGN.md §10.4 (span durations land in the
+    ``span.<name>`` histogram of the default registry when metrics are
+    on; one extra frame + one branch when obs is off)."""
+    import functools
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            with obs.span(name):
+                return fn(*a, **kw)
+        return wrapper
+    return deco
 
 
 class UpdateStats(NamedTuple):
@@ -243,6 +260,7 @@ class StreamEngine:
         the insert hot path)."""
         return self._gid[np.flatnonzero(~self._dead[: self._count])]
 
+    @_spanned("stream.update")
     def insert_batch(self, u, v, w) -> UpdateStats:
         """Apply one batch of undirected weighted edge insertions.
 
@@ -287,6 +305,7 @@ class StreamEngine:
             recompiles=self.recompiles,
         )
 
+    @_spanned("stream.delete")
     def delete_batch(self, u, v) -> DeleteStats:
         """Tombstone a batch of undirected edges (by endpoints).
 
@@ -339,6 +358,7 @@ class StreamEngine:
             compacted=compacted,
         )
 
+    @_spanned("stream.compact")
     def compact(self) -> UpdateStats:
         """Drop tombstoned rows and rebuild labels/weight from the retained
         forest edges (the rebuild-from-retained compaction path)."""
@@ -398,6 +418,7 @@ class StreamEngine:
         # pack32(255, 2^24−1) == identity collision.
         return self._packable and self.union_edge_capacity < PACK_IDX_MASK
 
+    @_spanned("stream.union_solve")
     def _run_union(self, b_lo, b_hi, b_w, b_gid):
         """MSF over (live forest ∪ batch) in the fixed-capacity union
         buffer; rewrite the store from the result and publish a snapshot."""

@@ -1,0 +1,344 @@
+"""Observability (`repro.obs`) — tracer, registry, export, and the
+no-observer-effect contract (DESIGN.md §10).
+
+The load-bearing suite here is the parity block: enabling ``obs="trace"``
+switches the flat and coarsen engines to phase-split execution
+(host-driven round/phase loops instead of the one-jit production paths),
+and these tests pin that the switch changes **no solver output bit** —
+weight, msf_eids, and parent must be identical across obs modes for
+every engine.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.graphs.generators import random_graph
+from repro.graphs.structures import nx_free_n_components
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends with obs off and empty buffers."""
+    obs.disable()
+    obs.reset()
+    obs.metrics_reset()
+    yield
+    obs.disable()
+    obs.reset()
+    obs.metrics_reset()
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_span_is_shared_noop_singleton():
+    # The disabled path is one branch + zero allocation: span() must
+    # return the same object every time, and it must be inert.
+    s1 = obs.span("a")
+    s2 = obs.span("b", level=3)
+    assert s1 is s2 is obs.NOOP_SPAN
+    with s1 as sp:
+        assert sp.attach("payload") == "payload"
+        sp.set(anything="goes")
+    assert obs.trace_events() == []
+    assert obs.metrics_snapshot()["histograms"] == {}
+
+
+def test_span_nesting_records_all_levels():
+    obs.enable("trace")
+    with obs.span("outer", level=0):
+        with obs.span("inner", level=1):
+            pass
+        with obs.span("inner", level=2):
+            pass
+    names = [e[0] for e in obs.trace_events()]
+    # Children exit (and record) before the parent.
+    assert names == ["inner", "inner", "outer"]
+    outer = next(e for e in obs.trace_events() if e[0] == "outer")
+    inner = [e for e in obs.trace_events() if e[0] == "inner"]
+    # Interval containment on the same thread — what Perfetto nests by.
+    for name, t0, dur, tid, _attrs in inner:
+        assert tid == outer[3]
+        assert outer[1] <= t0
+        assert t0 + dur <= outer[1] + outer[2]
+
+
+def test_enabled_is_upgrade_only():
+    obs.enable("trace")
+    with obs.enabled("metrics"):  # must NOT downgrade the global mode
+        assert obs.mode() == "trace"
+    with obs.enabled("off"):
+        assert obs.mode() == "trace"
+    obs.disable()
+    with obs.enabled("metrics"):
+        assert obs.mode() == "metrics"
+        with obs.enabled("trace"):
+            assert obs.mode() == "trace"
+        assert obs.mode() == "metrics"
+    assert obs.mode() == "off"
+
+
+def test_collect_timings_aggregates_by_name():
+    obs.enable("metrics")
+    with obs.collect_timings() as t:
+        with obs.span("phase.a"):
+            pass
+        with obs.span("phase.a"):
+            pass
+        with obs.span("phase.b"):
+            pass
+    assert set(t) == {"phase.a", "phase.b"}
+    assert all(v >= 0.0 for v in t.values())
+    h = obs.metrics_snapshot()["histograms"]
+    assert h["span.phase.a"]["count"] == 2
+    assert h["span.phase.b"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_and_gauge():
+    obs.counter("c").inc()
+    obs.counter("c").inc(41)
+    obs.gauge("g").set(2.5)
+    snap = obs.metrics_snapshot()
+    assert snap["counters"]["c"] == 42
+    assert snap["gauges"]["g"] == 2.5
+    with pytest.raises(ValueError):
+        obs.counter("c").inc(-1)
+
+
+def test_histogram_percentiles_uniform():
+    # 1..1000 ms uniformly: percentiles should match the analytic value
+    # to within one log-bucket's width (the documented approximation).
+    h = obs.histogram("lat")
+    for ms in range(1, 1001):
+        h.observe(ms / 1e3)
+    for q in (50, 95, 99):
+        got = h.percentile(q)
+        want = q / 100.0  # q-th percentile of U(0, 1] seconds
+        assert want / 2.2 <= got <= want * 2.2, (q, got, want)
+    s = h.summary()
+    assert s["count"] == 1000
+    assert s["min"] == pytest.approx(1e-3)
+    assert s["max"] == pytest.approx(1.0)
+    assert s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+
+
+def test_histogram_single_value_and_clamping():
+    h = obs.histogram("one")
+    for _ in range(10):
+        h.observe(0.25)
+    s = h.summary()
+    # Interpolation is clamped to the observed [min, max]: a
+    # single-valued stream reports that value at every quantile.
+    assert s["p50"] == s["p95"] == s["p99"] == pytest.approx(0.25)
+
+
+def test_histogram_rejects_bad_bounds():
+    from repro.obs.metrics import Histogram
+
+    with pytest.raises(ValueError):
+        Histogram(bounds=())
+    with pytest.raises(ValueError):
+        Histogram(bounds=(1.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export
+# ---------------------------------------------------------------------------
+
+
+def test_export_trace_schema_roundtrip(tmp_path):
+    obs.enable("trace")
+    with obs.span("outer", n=64):
+        with obs.span("inner"):
+            pass
+    path = str(tmp_path / "trace.json")
+    doc = obs.export_trace(path)
+    on_disk = json.loads(open(path).read())
+    assert on_disk == doc
+    complete = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert {e["name"] for e in complete} == {"outer", "inner"}
+    for e in complete:
+        assert isinstance(e["ts"], float) and e["ts"] >= 0.0
+        assert isinstance(e["dur"], float) and e["dur"] >= 0.0
+        assert e["pid"] == 0 and isinstance(e["tid"], int)
+    outer = next(e for e in complete if e["name"] == "outer")
+    assert outer["args"] == {"n": 64}
+    # Metadata events name the process/threads for the Perfetto UI.
+    assert any(e.get("ph") == "M" for e in doc["traceEvents"])
+    assert doc["otherData"]["dropped_events"] == 0
+    # The repo's own CI validator must accept its own exporter's output.
+    import sys
+
+    sys.path.insert(0, "tools")
+    try:
+        from check_trace import check
+
+        assert check(path, ["outer", "inner"]) is None
+        assert check(path, ["absent-span"]) is not None
+    finally:
+        sys.path.remove("tools")
+
+
+# ---------------------------------------------------------------------------
+# no-observer-effect parity: obs must never change solver output
+# ---------------------------------------------------------------------------
+
+
+def _assert_reports_identical(a, b, what):
+    assert float(a.weight) == float(b.weight), what
+    assert np.array_equal(np.asarray(a.msf_eids), np.asarray(b.msf_eids)), what
+    assert np.array_equal(np.asarray(a.parent), np.asarray(b.parent)), what
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_trace_parity_coarsen(fused):
+    from repro.coarsen import CoarsenConfig
+    from repro.solve import SolveSpec, plan
+
+    g = random_graph(512, 2048, seed=11)
+    cfg = CoarsenConfig(cutoff=32, rounds_per_level=2)
+    base = plan(g, SolveSpec(mode="coarsen", coarsen=cfg, fused=fused)).solve()
+    for mode in ("metrics", "trace"):
+        obs.reset()
+        rep = plan(
+            g, SolveSpec(mode="coarsen", coarsen=cfg, fused=fused, obs=mode)
+        ).solve()
+        _assert_reports_identical(base, rep, f"coarsen fused={fused} {mode}")
+        assert rep.timings and "solve.coarsen" in rep.timings
+    assert base.timings == {}
+    # The acceptance contract: the fused trace shows the per-level phases.
+    if fused:
+        names = {e[0] for e in obs.trace_events()}
+        assert {"coarsen.level", "coarsen.contract", "coarsen.relabel",
+                "coarsen.filter", "coarsen.residual"} <= names
+
+
+def test_trace_parity_flat():
+    from repro.solve import SolveSpec, plan
+
+    g = random_graph(256, 1024, seed=7)
+    base = plan(g, SolveSpec()).solve()
+    rep = plan(g, SolveSpec(obs="trace")).solve()
+    _assert_reports_identical(base, rep, "flat trace")
+    assert rep.timings["msf.round"] >= 0.0
+    names = [e[0] for e in obs.trace_events()]
+    # One span per hook+shortcut round, nested under msf.flat.
+    assert names.count("msf.round") == int(rep.iterations)
+    assert "msf.flat" in names
+
+
+def test_trace_parity_stream():
+    from repro.solve import SolveSpec, plan
+
+    rng = np.random.default_rng(3)
+    reports = []
+    for mode in ("off", "trace"):
+        p = plan(256, SolveSpec(mode="stream", obs=mode))
+        r = np.random.default_rng(5)
+        rep = None
+        for _ in range(3):
+            u = r.integers(0, 256, 64).astype(np.int32)
+            v = r.integers(0, 256, 64).astype(np.int32)
+            w = r.random(64).astype(np.float32)
+            rep = p.update(u, v, w)
+        reports.append(p.solve())
+        if mode == "trace":
+            conn = p.query(np.arange(8), np.arange(8, 16))
+            assert conn.shape == (8,)
+            h = obs.metrics_snapshot()["histograms"]
+            assert h["span.stream.update"]["count"] == 3
+            assert {"p50", "p95", "p99"} <= set(h["span.stream.query"])
+    _assert_reports_identical(reports[0], reports[1], "stream trace")
+    obs.disable()
+    del rng
+
+
+def test_trace_parity_dist(dist_mesh, dist_mesh_shape):
+    from repro.coarsen import CoarsenConfig
+    from repro.graphs.partition import partition_edges_2d
+    from repro.solve import SolveSpec, plan
+
+    g = random_graph(512, 2048, seed=13)
+    part = partition_edges_2d(g, *dist_mesh_shape)
+    cfg = CoarsenConfig(cutoff=64)
+    base = plan(part, SolveSpec(mode="dist", coarsen=cfg), mesh=dist_mesh).solve()
+    rep = plan(
+        part, SolveSpec(mode="dist", coarsen=cfg, obs="metrics"),
+        mesh=dist_mesh,
+    ).solve()
+    _assert_reports_identical(base, rep, "dist metrics")
+    snap = obs.metrics_snapshot()
+    # Analytic all-reduce accounting: every level + residual round adds
+    # its combine passes over the dense [n_pad] accumulator.
+    assert snap["counters"]["dist.allreduce.passes"] > 0
+    assert snap["counters"]["dist.allreduce.elements"] > 0
+    assert "span.dist.residual" in snap["histograms"]
+
+
+def test_plan_cache_counters():
+    from repro.solve import SolveSpec, plan
+    from repro.solve.planner import clear_plan_cache
+
+    g = random_graph(128, 512, seed=2)
+    clear_plan_cache()
+    plan(g, SolveSpec(obs="metrics"))
+    plan(g, SolveSpec(obs="metrics"))
+    snap = obs.metrics_snapshot()["counters"]
+    assert snap["plan.cache.miss"] == 1
+    assert snap["plan.cache.hit"] == 1
+
+
+def test_spec_rejects_unknown_obs_mode():
+    from repro.solve import SolveSpec
+
+    with pytest.raises(ValueError, match="obs"):
+        SolveSpec(obs="verbose")
+
+
+# ---------------------------------------------------------------------------
+# SolveReport.n_components (satellite fix): canonical-root counting
+# ---------------------------------------------------------------------------
+
+
+def test_n_components_counts_canonical_roots():
+    from repro.solve.report import SolveReport
+
+    # Non-canonical parent: 3 -> 2 -> 1 -> 1 chain plus root 0. A naive
+    # parent[i] == i count is right here, but np.unique on the raw
+    # (uncanonicalized) vector would see {1, 2} labels as distinct
+    # components — the regression the canonicalizing property fixes.
+    parent = np.array([0, 1, 1, 2], np.int32)
+    rep = SolveReport(
+        mode="flat", weight=0.0, msf_eids=np.zeros(0, np.int32),
+        parent=parent, n_msf_edges=0, iterations=0, levels=(),
+        host_roundtrips=0, recompiles=0, raw=None,
+    )
+    assert rep.n_components == 2
+    # Oracle: unique labels after full pointer-jumping canonicalization.
+    p = parent.copy()
+    while not np.array_equal(p[p], p):
+        p = p[p]
+    assert rep.n_components == len(np.unique(p))
+
+
+def test_n_components_matches_graph_truth():
+    from repro.solve import SolveSpec, plan
+
+    g = random_graph(200, 300, seed=21)
+    rep = plan(g, SolveSpec()).solve()
+    assert rep.n_components == nx_free_n_components(g)
+    p = np.asarray(rep.parent)
+    while not np.array_equal(p[p], p):
+        p = p[p]
+    assert rep.n_components == len(np.unique(p))

@@ -1,0 +1,66 @@
+"""CI gate: validate an exported Chrome-trace/Perfetto JSON.
+
+Usage: python tools/check_trace.py TRACE.json [expected-span ...]
+
+Asserts the file parses, follows the Trace Event Format the exporter
+promises (``traceEvents`` list; complete events carry ``ph: "X"`` with
+numeric ``ts``/``dur`` and a ``pid``/``tid``), and — when expected span
+names are given — that each appears at least once. Exit code 0 on
+success; a one-line reason on stderr otherwise. Keeps CI honest that the
+``--trace`` artifact uploaded next to BENCH_*.json actually opens in
+ui.perfetto.dev / chrome://tracing.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check(path: str, expected: list[str]) -> str | None:
+    """Return None when the trace is valid, else the failure reason."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return f"{path}: cannot parse: {e}"
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return f"{path}: no traceEvents"
+    complete = [e for e in events if e.get("ph") == "X"]
+    if not complete:
+        return f"{path}: no complete ('X') events"
+    for e in complete:
+        for field in ("name", "ts", "dur", "pid", "tid"):
+            if field not in e:
+                return f"{path}: event missing {field!r}: {e}"
+        if not isinstance(e["ts"], (int, float)) or e["ts"] < 0:
+            return f"{path}: bad ts in {e}"
+        if not isinstance(e["dur"], (int, float)) or e["dur"] < 0:
+            return f"{path}: bad dur in {e}"
+    names = {e["name"] for e in complete}
+    missing = [want for want in expected if want not in names]
+    if missing:
+        return (
+            f"{path}: expected spans absent: {missing} "
+            f"(have: {sorted(names)})"
+        )
+    return None
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_trace.py TRACE.json [expected-span ...]",
+              file=sys.stderr)
+        return 2
+    reason = check(argv[0], argv[1:])
+    if reason is not None:
+        print(reason, file=sys.stderr)
+        return 1
+    with open(argv[0]) as f:
+        n = len(json.load(f)["traceEvents"])
+    print(f"{argv[0]}: OK ({n} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
