@@ -41,8 +41,7 @@ import sys
 import numpy as np
 
 from benchmarks.common import assert_msf_parity as _assert_parity
-from benchmarks.common import eid_set as _eid_set
-from benchmarks.common import emit, row, timeit
+from benchmarks.common import cost_fragment, emit, measure
 from repro.coarsen import CoarsenConfig
 from repro.graphs import grid_road_graph, rmat_graph
 from repro.graphs.generators import components_graph
@@ -59,21 +58,24 @@ def _bench_graph(name: str, g, cfg: CoarsenConfig, check: bool = False):
     rep = p_co.solve()  # warms the jit caches AND supplies the level stats
     if check:
         _assert_parity(p_flat.solve(), rep, f"coarsen_{name}")
-    t_flat = timeit(lambda: p_flat.solve(), iters=3)
-    t_co = timeit(lambda: p_co.solve(), warmup=0, iters=3)
+    m_flat = measure(f"flat_{name}", lambda: p_flat.solve(), iters=3)
+    m_co = measure(f"coarsen_{name}", lambda: p_co.solve(), warmup=0, iters=3)
+    t_flat, t_co = m_flat.median / 1e6, m_co.median / 1e6
     sched = "|".join(f"{l.n}/{l.m}>{l.n_next}/{l.m_next}" for l in rep.levels)
     last = rep.levels[-1] if rep.levels else None
     m_und = int(np.asarray(g.valid).sum()) // 2
     return [
-        row(
-            f"coarsen_{name}",
-            t_co * 1e6,
+        m_co.with_derived(
             f"speedup_vs_flat={t_flat / t_co:.2f}x;levels={len(rep.levels)};"
             f"schedule={sched};"
             f"residual_n={last.n_next if last else g.n};"
-            f"residual_m={last.m_next if last else m_und}",
+            f"residual_m={last.m_next if last else m_und}"
+            + cost_fragment(rep, t_co)
         ),
-        row(f"flat_{name}", t_flat * 1e6, f"edges={g.num_directed_edges}"),
+        m_flat.with_derived(
+            f"edges={g.num_directed_edges}"
+            + cost_fragment(p_flat.solve(), t_flat)
+        ),
     ]
 
 
@@ -133,22 +135,26 @@ def _bench_fused(name: str, g, cfg: CoarsenConfig, check: bool = False):
             plan(g, SolveSpec(mode="coarsen", coarsen=cfg_fused)).solve(),
             f"fused_{name}",
         )
-    t_pr2 = timeit(lambda: _pr2_run_levels(g, cfg), iters=3)
-    t_host = timeit(lambda: run_levels(g, cfg_host), iters=3)
-    t_fused = timeit(lambda: run_levels(g, cfg_fused), iters=3)
+    m_pr2 = measure(f"pr2_levels_{name}", lambda: _pr2_run_levels(g, cfg),
+                    iters=3, derived=f"edges={g.num_directed_edges}")
+    m_host = measure(f"host_levels_{name}", lambda: run_levels(g, cfg_host),
+                     iters=3, derived=f"edges={g.num_directed_edges}")
+    m_fused = measure(f"fused_levels_{name}", lambda: run_levels(g, cfg_fused),
+                      iters=3)
+    t_pr2, t_host, t_fused = (
+        m_pr2.median / 1e6, m_host.median / 1e6, m_fused.median / 1e6,
+    )
     pre = run_levels(g, cfg_fused)
     st = pre.stats
     return [
-        row(
-            f"fused_levels_{name}",
-            t_fused * 1e6,
+        m_fused.with_derived(
             f"speedup_vs_pr2={t_pr2 / t_fused:.2f}x;"
             f"speedup_vs_host={t_host / t_fused:.2f}x;"
             f"levels={len(st.levels)};residual_n={st.residual_n};"
-            f"residual_m={st.residual_m}",
+            f"residual_m={st.residual_m}"
         ),
-        row(f"pr2_levels_{name}", t_pr2 * 1e6, f"edges={g.num_directed_edges}"),
-        row(f"host_levels_{name}", t_host * 1e6, f"edges={g.num_directed_edges}"),
+        m_pr2,
+        m_host,
     ]
 
 
@@ -198,24 +204,22 @@ def _bench_dist(name: str, g, cfg: CoarsenConfig, check: bool = False):
         assert rep.host_roundtrips == 0, "in-mesh path round-tripped"
         assert len(rep.levels) >= 1, "in-mesh contraction never ran"
         _assert_parity(flat_r, run_prelude(), f"dist_prelude_{name}")
-    t_mesh = timeit(run_inmesh, iters=3)
-    t_pre = timeit(run_prelude, iters=3)
+    m_mesh = measure(f"dist_fused_{name}", run_inmesh, iters=3)
+    m_pre = measure(
+        f"dist_prelude_{name}", run_prelude, iters=3,
+        derived=f"host_repartitions={len(prelude.stats.levels)};"
+        f"mesh={rows}x{cols}",
+    )
+    t_mesh, t_pre = m_mesh.median / 1e6, m_pre.median / 1e6
     st = p_mesh.driver.last_stats
     return [
-        row(
-            f"dist_fused_{name}",
-            t_mesh * 1e6,
+        m_mesh.with_derived(
             f"speedup_vs_prelude={t_pre / t_mesh:.2f}x;"
             f"host_repartitions=0;levels={len(st.levels)};"
             f"residual_n={st.residual_n};residual_iters={st.residual_iters};"
-            f"mesh={rows}x{cols}",
+            f"mesh={rows}x{cols}"
         ),
-        row(
-            f"dist_prelude_{name}",
-            t_pre * 1e6,
-            f"host_repartitions={len(prelude.stats.levels)};"
-            f"mesh={rows}x{cols}",
-        ),
+        m_pre,
     ]
 
 

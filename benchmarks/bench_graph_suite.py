@@ -2,7 +2,7 @@
 correctness, iteration counts, and throughput (directed edges/s)."""
 from __future__ import annotations
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit, measure
 from repro.core.connectivity import connected_components
 from repro.core.msf import msf
 from repro.graphs import grid_road_graph, random_graph, rmat_graph
@@ -22,17 +22,21 @@ def run_rows():
         oracle = nx_free_msf_weight(g)
         r = msf(g)
         assert abs(float(r.weight) - oracle) < max(1.0, 1e-6 * oracle), nm
-        t = timeit(lambda: msf(g), iters=2)
-        meps = g.num_directed_edges / t / 1e6
-        out.append(row(f"table1_msf_{nm}", t * 1e6,
-                       f"iters={int(r.iterations)};Medges_per_s={meps:.1f}"))
+        m = measure(f"table1_msf_{nm}", lambda: msf(g), iters=2)
+        meps = g.num_directed_edges / (m.median / 1e6) / 1e6
+        out.append(m.with_derived(
+            f"iters={int(r.iterations)};Medges_per_s={meps:.1f}"
+        ))
         cc = connected_components(g)
         assert int(cc.n_components) == nx_free_n_components(g), nm
-        t2 = timeit(lambda: connected_components(g), iters=2)
-        out.append(row(f"table1_cc_{nm}", t2 * 1e6,
-                       f"ncc={int(cc.n_components)};iters={int(cc.iterations)}"))
+        out.append(measure(
+            f"table1_cc_{nm}", lambda: connected_components(g), iters=2,
+            derived=f"ncc={int(cc.n_components)};iters={int(cc.iterations)}",
+        ))
     return out
 
 
 if __name__ == "__main__":
-    print("\n".join(run_rows()))
+    import sys
+
+    emit(run_rows(), sys.argv[1:])

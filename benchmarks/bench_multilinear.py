@@ -7,7 +7,7 @@ multilinear kernel fuses f(p_i, a_ij, p_j) into the reduction.
 """
 from __future__ import annotations
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit, measure, point
 from repro.core.msf import msf
 from repro.graphs import rmat_graph
 from repro.graphs.structures import nx_free_msf_weight
@@ -22,17 +22,18 @@ def run_rows():
         for variant in ["complete", "pairwise"]:
             r = msf(g, variant=variant)
             assert abs(float(r.weight) - oracle) < 1e-3
-            t = timeit(lambda: msf(g, variant=variant))
             nm = "multilinear" if variant == "complete" else "pairwise"
-            times[nm] = t
-            out.append(row(
-                f"fig8_S{scale}_E{ef}_{nm}", t * 1e6,
-                f"iters={int(r.iterations)};m={g.num_directed_edges // 2}",
-            ))
-        out.append(row(
+            m = measure(
+                f"fig8_S{scale}_E{ef}_{nm}", lambda: msf(g, variant=variant),
+                derived=f"iters={int(r.iterations)};"
+                f"m={g.num_directed_edges // 2}",
+            )
+            times[nm] = m.median / 1e6
+            out.append(m)
+        out.append(point(
             f"fig8_S{scale}_E{ef}_speedup",
-            times["pairwise"] / times["multilinear"],
-            "x multilinear over pairwise; paper's orders-of-magnitude Fig-8 "
+            times["pairwise"] / times["multilinear"], "x",
+            "multilinear over pairwise; paper's orders-of-magnitude Fig-8 "
             "gap is CTF's distributed tensor-update remote writes — XLA "
             "fuses most of the local materialization away (see EXPERIMENTS)",
         ))
@@ -40,4 +41,6 @@ def run_rows():
 
 
 if __name__ == "__main__":
-    print("\n".join(run_rows()))
+    import sys
+
+    emit(run_rows(), sys.argv[1:])

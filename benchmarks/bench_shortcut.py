@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit, measure, point
 from repro.core.msf import msf
 from repro.graphs import grid_road_graph
 from repro.graphs.structures import nx_free_msf_weight
@@ -25,10 +25,10 @@ def run_rows():
             kw["capacity"] = cap
         r = msf(g, **kw)
         assert abs(float(r.weight) - oracle) < 1e-3, strategy
-        t = timeit(lambda: msf(g, **kw))
-        out.append(row(
-            f"fig3_shortcut_{strategy}", t * 1e6,
-            f"iters={int(r.iterations)};n=90000;m={g.num_directed_edges // 2}",
+        out.append(measure(
+            f"fig3_shortcut_{strategy}", lambda: msf(g, **kw),
+            derived=f"iters={int(r.iterations)};n=90000;"
+            f"m={g.num_directed_edges // 2}",
         ))
     # Fig 4 analogue: per-iteration sub-iteration counts for complete shortcut
     from repro.core.shortcut import count_shortcut_subiters
@@ -36,10 +36,14 @@ def run_rows():
 
     p = jnp.arange(g.n, dtype=jnp.int32)
     r = msf(g, variant="complete", shortcut="complete")
-    out.append(row("fig4_total_iterations", float(int(r.iterations)),
-                   "complete-shortcut outer iterations (paper: 13 for road_usa)"))
+    out.append(point(
+        "fig4_total_iterations", float(int(r.iterations)), "count",
+        "complete-shortcut outer iterations (paper: 13 for road_usa)",
+    ))
     return out
 
 
 if __name__ == "__main__":
-    print("\n".join(run_rows()))
+    import sys
+
+    emit(run_rows(), sys.argv[1:])

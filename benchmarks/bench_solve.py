@@ -28,7 +28,7 @@ import sys
 import warnings
 
 from benchmarks.common import assert_msf_parity as _assert_parity
-from benchmarks.common import emit, row, timeit, with_trace
+from benchmarks.common import cost_fragment, emit, from_samples, measure, timeit, with_trace
 from repro.coarsen import CoarsenConfig
 from repro.graphs import grid_road_graph, rmat_graph
 from repro.solve import SolveSpec, plan
@@ -48,13 +48,14 @@ def _bench_flat(name, g):
     from repro.core.msf import msf
 
     p = plan(g, SolveSpec())
+    rep = p.solve()
     shim_r = _deprecated(msf, g)
-    _assert_parity(p.solve(), shim_r, f"solve_flat_{name}")
-    t_spec = timeit(lambda: p.solve(), iters=3)
+    _assert_parity(rep, shim_r, f"solve_flat_{name}")
+    m = measure(f"solve_flat_{name}", lambda: p.solve(), iters=3)
     t_shim = timeit(lambda: _deprecated(msf, g), iters=3)
-    return [row(
-        f"solve_flat_{name}", t_spec * 1e6,
-        f"shim_us={t_shim * 1e6:.1f};edges={g.num_directed_edges}",
+    return [m.with_derived(
+        f"shim_us={t_shim * 1e6:.1f};edges={g.num_directed_edges}"
+        + cost_fragment(rep, m.median / 1e6)
     )]
 
 
@@ -62,13 +63,14 @@ def _bench_coarsen(name, g, cfg):
     from repro.core.msf import msf
 
     p = plan(g, SolveSpec(mode="coarsen", coarsen=cfg, fused=True))
+    rep = p.solve()
     shim_r = _deprecated(msf, g, coarsen=cfg, fused=True)
-    _assert_parity(p.solve(), shim_r, f"solve_coarsen_{name}")
-    t_spec = timeit(lambda: p.solve(), iters=3)
+    _assert_parity(rep, shim_r, f"solve_coarsen_{name}")
+    m = measure(f"solve_coarsen_{name}", lambda: p.solve(), iters=3)
     t_shim = timeit(lambda: _deprecated(msf, g, coarsen=cfg, fused=True), iters=3)
-    return [row(
-        f"solve_coarsen_{name}", t_spec * 1e6,
-        f"shim_us={t_shim * 1e6:.1f};levels={len(p.solve().levels)}",
+    return [m.with_derived(
+        f"shim_us={t_shim * 1e6:.1f};levels={len(rep.levels)}"
+        + cost_fragment(rep, m.median / 1e6)
     )]
 
 
@@ -87,11 +89,10 @@ def _bench_dist(name, g):
     drv = _deprecated(msf_distributed, part, mesh)
     args = (part.src_row, part.dst_col, part.w, part.eid, part.valid)
     _assert_parity(p.solve(), drv(*args), f"solve_dist_{name}")
-    t_spec = timeit(lambda: p.solve(), iters=3)
+    m = measure(f"solve_dist_{name}", lambda: p.solve(), iters=3)
     t_shim = timeit(lambda: drv(*args), iters=3)
-    return [row(
-        f"solve_dist_{name}", t_spec * 1e6,
-        f"shim_us={t_shim * 1e6:.1f};mesh={shape[0]}x{shape[1]}",
+    return [m.with_derived(
+        f"shim_us={t_shim * 1e6:.1f};mesh={shape[0]}x{shape[1]}"
     )]
 
 
@@ -121,11 +122,17 @@ def _bench_stream(name, g):
     assert abs(rep.weight - eng.weight) <= max(1.0, 1e-6 * abs(rep.weight)), (
         f"solve_stream_{name}", rep.weight, eng.weight,
     )
-    t_spec = timeit(replay_spec, warmup=0, iters=2)
+    import time as _time
+
+    ts = []
+    for _ in range(2):
+        t0 = _time.perf_counter()
+        replay_spec()
+        ts.append(_time.perf_counter() - t0)
+    m = from_samples(f"solve_stream_{name}", ts, per=n_batches)
     t_shim = timeit(replay_shim, warmup=0, iters=2)
-    return [row(
-        f"solve_stream_{name}", t_spec / n_batches * 1e6,
-        f"shim_us={t_shim / n_batches * 1e6:.1f};batches={n_batches}",
+    return [m.with_derived(
+        f"shim_us={t_shim / n_batches * 1e6:.1f};batches={n_batches}"
     )]
 
 

@@ -23,7 +23,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, row, timeit
+from benchmarks.common import emit, from_samples, measure
 from repro.graphs.generators import rmat_graph
 from repro.graphs.structures import from_edges
 from repro.launch.serve_graph import undirected_edges
@@ -79,10 +79,10 @@ def run_smoke_rows():
                 "coarsen smoke degenerated to the flat recompute"
             )
         out.append(
-            row(
+            from_samples(
                 f"stream_smoke_{name}_s{SMOKE_SCALE}_b{SMOKE_BATCH}",
-                dt / n_batches * 1e6,
-                f"batches={n_batches};weight={rep.weight:.0f}",
+                [dt], per=n_batches,
+                derived=f"batches={n_batches};weight={rep.weight:.0f}",
             )
         )
     return out
@@ -106,40 +106,40 @@ def run_rows():
         t0 = time.perf_counter()
         stream.update(lo[sl], hi[sl], w[sl])
         lats.append(time.perf_counter() - t0)
-    t_insert = float(np.median(lats[max(1, n_batches // 2):]))
+    tail = lats[max(1, n_batches // 2):]
+    t_insert = float(np.median(tail))
 
     # Full recompute over the same accumulated edge set (seed behaviour).
     m_seen = n_batches * BATCH
     g_acc = from_edges(lo[:m_seen], hi[:m_seen], w[:m_seen].astype(np.float64), n)
     full = plan(g_acc, SolveSpec())
-    t_full = timeit(lambda: full.solve(), iters=2)
+    m_full = measure(f"stream_recompute_rmat_s{SCALE}_e{EDGE_FACTOR}_b{BATCH}",
+                     lambda: full.solve(), iters=2)
+    t_full = m_full.median / 1e6
 
     union_directed = stream._engine.engine.last_union_shape[0]
     name = f"rmat_s{SCALE}_e{EDGE_FACTOR}_b{BATCH}"
     out = [
-        row(
-            f"stream_insert_{name}",
-            t_insert * 1e6,
-            f"union_edges={union_directed};"
+        from_samples(
+            f"stream_insert_{name}", tail,
+            derived=f"union_edges={union_directed};"
             f"updates_per_s={1.0 / t_insert:.1f};"
             f"edges_per_s={BATCH / t_insert:.0f}",
         ),
-        row(
-            f"stream_recompute_{name}",
-            t_full * 1e6,
+        m_full.with_derived(
             f"edges={g_acc.num_directed_edges};"
-            f"speedup_vs_stream={t_full / t_insert:.1f}x",
+            f"speedup_vs_stream={t_full / t_insert:.1f}x"
         ),
     ]
 
     qu = rng.integers(0, n, QUERY_BATCH)
     qv = rng.integers(0, n, QUERY_BATCH)
-    t_q = timeit(lambda: stream.query(qu, qv), iters=3)
+    m_q = measure(f"stream_queries_{name}", lambda: stream.query(qu, qv),
+                  iters=3)
+    t_q = m_q.median / 1e6
     out.append(
-        row(
-            f"stream_queries_{name}",
-            t_q * 1e6,
-            f"batch={QUERY_BATCH};queries_per_s={QUERY_BATCH / t_q:.0f}",
+        m_q.with_derived(
+            f"batch={QUERY_BATCH};queries_per_s={QUERY_BATCH / t_q:.0f}"
         )
     )
     return out

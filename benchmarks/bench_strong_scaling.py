@@ -16,7 +16,7 @@ import sys
 import os
 import json
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit, measure, point
 from repro.core.msf import msf
 from repro.graphs import grid_road_graph, rmat_graph
 
@@ -42,9 +42,11 @@ def run_rows():
     for nm, g in [("road_300x300", grid_road_graph(300, 300, seed=0)),
                   ("rmat_s14_e8", rmat_graph(14, 8, seed=1))]:
         r = msf(g)
-        t = timeit(lambda: msf(g))
-        out.append(row(f"fig5_single_device_{nm}", t * 1e6,
-                       f"iters={int(r.iterations)};per_iter_us={t*1e6/max(int(r.iterations),1):.0f}"))
+        m = measure(f"fig5_single_device_{nm}", lambda: msf(g))
+        out.append(m.with_derived(
+            f"iters={int(r.iterations)};"
+            f"per_iter_us={m.median / max(int(r.iterations), 1):.0f}"
+        ))
     # communication-volume strong scaling (per AS iteration, per device)
     n, m = 1 << 20, (1 << 20) * 8
     for (rr, cc) in [(1, 1), (2, 2), (4, 4), (8, 8)]:
@@ -54,10 +56,12 @@ def run_rows():
                               str(rr), str(cc), str(n), str(m)],
                              capture_output=True, text=True, env=env, timeout=560)
         d = json.loads(res.stdout.strip().splitlines()[-1])
-        out.append(row(f"fig5_commvolume_p{d['p']}", d["coll"],
-                       f"collective_bytes_per_device_per_iter;n={n};m={m}"))
+        out.append(point(
+            f"fig5_commvolume_p{d['p']}", d["coll"], "bytes",
+            f"collective_bytes_per_device_per_iter;n={n};m={m}",
+        ))
     return out
 
 
 if __name__ == "__main__":
-    print("\n".join(run_rows()))
+    emit(run_rows(), sys.argv[1:])

@@ -5,7 +5,7 @@ paper's n ∝ √p law, plus sparsity sensitivity (f = 100·m/n² as in Fig 7).
 """
 from __future__ import annotations
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit, measure
 from repro.core.msf import msf
 from repro.graphs import random_graph
 
@@ -19,13 +19,15 @@ def run_rows():
             m = int(sp / 100 * n * n)
             g = random_graph(n, max(m, n), seed=pp)
             r = msf(g)
-            t = timeit(lambda: msf(g), iters=2)
-            out.append(row(
-                f"fig7_weak_p{pp}_sp{sp}", t * 1e6,
-                f"n={n};m={g.num_directed_edges // 2};iters={int(r.iterations)}",
+            out.append(measure(
+                f"fig7_weak_p{pp}_sp{sp}", lambda: msf(g), iters=2,
+                derived=f"n={n};m={g.num_directed_edges // 2};"
+                f"iters={int(r.iterations)}",
             ))
     return out
 
 
 if __name__ == "__main__":
-    print("\n".join(run_rows()))
+    import sys
+
+    emit(run_rows(), sys.argv[1:])

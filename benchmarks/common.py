@@ -1,16 +1,134 @@
-"""Shared benchmark helpers (timing on the CPU container; the TPU story is
-the dry-run roofline, EXPERIMENTS.md §Roofline)."""
+"""Shared benchmark harness: structured :class:`Measurement` rows.
+
+Every bench module emits ``Measurement`` records through this harness
+(timing on the CPU container; the TPU story is the dry-run roofline,
+EXPERIMENTS.md §Roofline). A measurement carries the full sample
+statistics (median/IQR/min/max over k post-warmup iterations), the
+per-bench ``repro.obs`` metrics snapshot when metrics mode is on, and a
+``unit`` so non-time rows (speedups, communication volume, iteration
+counts) stay structured instead of being smuggled through the time
+column. ``write_json`` persists them as a ``bench-rows/v2`` document
+with an environment fingerprint — the trajectory points the regression
+sentinel (``tools/check_bench_regression.py``) and the append-only
+history store (``benchmarks/history.py``) consume. DESIGN.md §11.
+"""
 from __future__ import annotations
 
+import dataclasses
 import json
+import os
+import platform
 import time
+from typing import Optional
 
 import jax
 import numpy as np
 
+SCHEMA = "bench-rows/v2"
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """One bench row. ``median``/``iqr``/``min``/``max`` are in ``unit``
+    (microseconds for time rows); ``iters`` is the post-warmup sample
+    count (1 for single-shot and non-time point values)."""
+
+    name: str
+    median: float
+    iqr: float = 0.0  # q75 - q25 of the samples; 0 when iters < 2
+    min: float = 0.0
+    max: float = 0.0
+    iters: int = 1
+    warmup: int = 0
+    unit: str = "us"  # "us" | "x" | "bytes" | "count"
+    derived: str = ""  # free-form key=value;... context (v1 compat)
+    metrics: Optional[dict] = None  # obs snapshot; None when obs off
+
+    def __str__(self) -> str:
+        # the printed CSV row (run.py header: name,us_per_call,derived)
+        return f"{self.name},{self.median:.1f},{self.derived}"
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if d["metrics"] is None:
+            del d["metrics"]
+        return d
+
+    def with_derived(self, derived: str) -> "Measurement":
+        """Same measurement, new derived string (stats are immutable)."""
+        return dataclasses.replace(self, derived=derived)
+
+
+def _obs_snapshot() -> Optional[dict]:
+    from repro import obs
+
+    return obs.metrics_snapshot() if obs.metrics_active() else None
+
+
+def from_samples(
+    name: str,
+    samples_s,
+    *,
+    warmup: int = 0,
+    derived: str = "",
+    per: float = 1.0,
+) -> Measurement:
+    """Build a time Measurement from raw wall-clock samples (seconds).
+
+    ``per`` divides every sample (e.g. batches per sample) so the row
+    reports per-call microseconds.
+    """
+    us = np.asarray(samples_s, dtype=np.float64) / max(per, 1e-30) * 1e6
+    if us.size == 0:
+        raise ValueError(f"{name}: no samples")
+    q25, q75 = np.percentile(us, [25, 75]) if us.size > 1 else (us[0], us[0])
+    return Measurement(
+        name=name,
+        median=float(np.median(us)),
+        iqr=float(q75 - q25),
+        min=float(us.min()),
+        max=float(us.max()),
+        iters=int(us.size),
+        warmup=int(warmup),
+        unit="us",
+        derived=derived,
+        metrics=_obs_snapshot(),
+    )
+
+
+def measure(
+    name: str,
+    fn,
+    *args,
+    warmup: int = 1,
+    iters: int = 3,
+    derived: str = "",
+    per: float = 1.0,
+) -> Measurement:
+    """Time ``fn(*args)`` (blocking on device results) into a Measurement."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return from_samples(name, ts, warmup=warmup, derived=derived, per=per)
+
+
+def point(name: str, value: float, unit: str, derived: str = "") -> Measurement:
+    """A non-time scalar row (speedup, byte volume, iteration count)."""
+    v = float(value)
+    return Measurement(
+        name=name, median=v, iqr=0.0, min=v, max=v, iters=1, warmup=0,
+        unit=unit, derived=derived, metrics=_obs_snapshot(),
+    )
+
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall-time (seconds) of jitted fn(*args), post-warmup."""
+    """Median wall-time (seconds) of jitted fn(*args), post-warmup —
+    the scalar core of :func:`measure`, kept for ratio rows that need
+    raw seconds (speedup numerators/denominators)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -19,10 +137,6 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
-
-
-def row(name: str, us: float, derived: str = "") -> str:
-    return f"{name},{us:.1f},{derived}"
 
 
 def eid_set(r) -> set:
@@ -41,38 +155,73 @@ def assert_msf_parity(ref, other, what: str) -> None:
     assert eid_set(ref) == eid_set(other), f"{what}: MSF edge set drifted"
 
 
-def write_json(path: str, rows: list[str]) -> None:
-    """Persist CSV rows as a BENCH_*.json trajectory point (CI artifact).
+def cost_fragment(rep, t_s: float) -> str:
+    """Measured-vs-roofline derived fields from ``SolveReport.cost``.
 
-    One file per bench run: environment fingerprint + the parsed rows, so
-    successive CI artifacts line up into a per-benchmark time series
-    without re-parsing stdout logs.
-    """
-    parsed = []
-    for r in rows:
-        name, us, derived = r.split(",", 2)
-        parsed.append(
-            {"name": name, "us_per_call": float(us), "derived": derived}
-        )
-    doc = {
-        "schema": "bench-rows/v1",
+    ``flops``/``hbm_bytes`` are the analytic counts of the plan's
+    executable (× iterations when the convergence loop is dynamic);
+    ``roofline_frac`` is the analytic bound time over the measured time
+    on the reference accelerator (TPU v5e constants — on the CPU
+    container it reads as "how far this run is from the modeled chip",
+    the dry-run story of EXPERIMENTS.md §Roofline)."""
+    c = getattr(rep, "cost", None)
+    if c is None or t_s <= 0:
+        return ""
+    mult = max(int(rep.iterations), 1) if c.dynamic_loops else 1
+    flops, byts = c.flops * mult, c.bytes * mult
+    from repro.analysis.roofline import TPU_V5E
+
+    bound_s = max(flops / TPU_V5E["peak_flops_bf16"],
+                  byts / TPU_V5E["hbm_bw"])
+    return (
+        f";flops={flops:.4g};hbm_bytes={byts:.4g}"
+        f";gflops_per_s={flops / t_s / 1e9:.3f}"
+        f";roofline_frac={bound_s / t_s:.2e}"
+    )
+
+
+def env_fingerprint() -> dict:
+    """The comparability key of a bench document: two runs are
+    comparable iff backend and device_count agree (the sentinel's
+    skip rule); the rest is provenance."""
+    return {
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
-        "rows": parsed,
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
     }
+
+
+def document(rows: list) -> dict:
+    """The ``bench-rows/v2`` document of a run: environment fingerprint
+    + structured rows — no string re-parsing, so bench names are free to
+    contain anything (the v1 schema split on commas and corrupted any
+    name containing one)."""
+    return {
+        "schema": SCHEMA,
+        "env": env_fingerprint(),
+        # duplicated at top level for cheap jq access / v1 familiarity
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "rows": [r.as_dict() for r in rows],
+    }
+
+
+def write_json(path: str, rows: list) -> None:
+    """Persist Measurement rows as a BENCH_*.json trajectory point."""
     with open(path, "w") as f:
-        json.dump(doc, f, indent=1, sort_keys=True)
+        json.dump(document(rows), f, indent=1, sort_keys=True)
 
 
-def emit(rows: list[str], argv: list[str]) -> None:
-    """Print rows; honor a ``--json PATH`` CLI flag when present."""
-    print("\n".join(rows))
-    if "--json" in argv:
-        at = argv.index("--json")
-        if at + 1 >= len(argv) or argv[at + 1].startswith("--"):
-            raise SystemExit("--json requires a PATH argument")
-        write_json(argv[at + 1], rows)
+def emit(rows: list, argv: list[str]) -> None:
+    """Print rows; honor ``--json PATH`` when present."""
+    print("\n".join(str(r) for r in rows))
+    path = flag_value(argv, "--json")
+    if path is not None:
+        write_json(path, rows)
 
 
 def flag_value(argv: list[str], flag: str) -> str | None:

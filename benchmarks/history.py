@@ -1,0 +1,69 @@
+"""Append-only bench history, one JSONL stream per (suite, backend,
+device_count).
+
+Each call to :func:`append` adds one line — a full ``bench-rows/v2``
+document plus a timestamp — to
+``<dir>/<suite>__<backend>__<device_count>.jsonl``. Appending never
+rewrites earlier lines, so the file is a time series the weekly CI job
+can keep extending through the artifact cache and the sentinel (or a
+human with jq) can aggregate without stitching per-run artifacts
+together. Environment changes land in *different* files by
+construction: runs that are not comparable (different backend or
+device topology) never share a stream. DESIGN.md §11.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import time
+
+
+def history_key(suite: str, backend: str, device_count: int) -> str:
+    """Filename stem of one comparable measurement stream."""
+    slug = re.sub(r"[^A-Za-z0-9_.-]+", "_", suite)
+    return f"{slug}__{backend}__{int(device_count)}"
+
+
+def history_path(history_dir: str, suite: str, backend: str,
+                 device_count: int) -> str:
+    return os.path.join(
+        history_dir, history_key(suite, backend, device_count) + ".jsonl"
+    )
+
+
+def append(history_dir: str, suite: str, doc: dict, *,
+           timestamp: float | None = None) -> str:
+    """Append one bench document to the suite's stream; returns the path.
+
+    ``doc`` is a ``bench-rows/v2`` document (``benchmarks.common
+    .write_json`` shape); backend/device_count are read from it so the
+    stream key always matches the run's own fingerprint.
+    """
+    env = doc.get("env", {})
+    backend = env.get("backend", doc.get("backend", "unknown"))
+    devices = env.get("device_count", doc.get("device_count", 0))
+    path = history_path(history_dir, suite, backend, devices)
+    os.makedirs(history_dir, exist_ok=True)
+    line = dict(doc)
+    line["suite"] = suite
+    line["ts"] = time.time() if timestamp is None else float(timestamp)
+    with open(path, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
+    return path
+
+
+def load(history_dir: str, suite: str, backend: str,
+         device_count: int) -> list[dict]:
+    """All appended documents of one stream, oldest first; [] when the
+    stream does not exist yet (empty history is not an error)."""
+    path = history_path(history_dir, suite, backend, device_count)
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for ln in f:
+            ln = ln.strip()
+            if ln:
+                out.append(json.loads(ln))
+    return out

@@ -7,6 +7,12 @@ symbol table of result shapes, recovers static trip counts from loop
 conditions, and accumulates per-computation:
 
 - ``dot_flops``      — 2 · |result| · |contracted dims| per dot
+- ``ew_flops``       — elementwise/reduction arithmetic: one op per
+                       result element for the arithmetic opcodes, operand
+                       elements per reduce, E·log2(E) comparisons per
+                       sort — the flop currency of gather/segment-min
+                       programs like the MSF kernels, which contain no
+                       dots at all
 - ``bytes``          — operands + result of top-level ops (fusion bodies
                        don't touch HBM; the fusion op's own operands do)
 - ``collective_bytes`` — operand bytes of all-gather / all-reduce /
@@ -15,6 +21,8 @@ conditions, and accumulates per-computation:
 then multiplies loop bodies by their trip counts. Dynamic loops (the MSF
 engine's convergence loop) get multiplier 1 and are flagged — their
 metrics are *per iteration* (the paper's own unit, Fig 3/4).
+``analyze()`` also reports ``flops`` = dot_flops + ew_flops, the total
+the roofline and ``SolveReport.cost`` consume.
 """
 from __future__ import annotations
 
@@ -44,6 +52,20 @@ _ELEMENTWISE = {
     "concatenate", "transpose", "rng-bit-generator", "shift-left",
     "shift-right-logical", "shift-right-arithmetic", "remainder",
     "cosine", "sine", "expm1", "log1p", "atan2", "real", "imag",
+}
+
+# Opcodes charged 1 flop per result element (arithmetic, compares,
+# selects, transcendentals). Deliberately a subset of _ELEMENTWISE:
+# pure data movement (copy/reshape/broadcast/iota/slice/pad/reverse/
+# concatenate/transpose/convert) moves bytes but computes nothing.
+_EW_FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "and", "or", "xor", "not", "negate", "abs", "sign", "compare",
+    "select", "clamp", "floor", "ceil", "round-nearest-afz", "is-finite",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "power", "atan2", "exponential", "exponential-minus-one",
+    "log", "log-plus-one", "rsqrt", "sqrt", "tanh", "logistic",
+    "cosine", "sine", "expm1", "log1p",
 }
 
 _DTYPE_BYTES = {
@@ -81,6 +103,20 @@ def _shape_info(type_str: str) -> Tuple[int, List[int]]:
         if first_dims is None:
             first_dims = dl
     return total, first_dims or []
+
+
+def _elements(type_str: str) -> float:
+    """Total array elements across a type string (tuples included)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return float(total)
 
 
 @dataclass
@@ -195,8 +231,8 @@ class HloCost:
         # gather-like ops inside this computation — used to discount the
         # operands of enclosing fusions (an input-fused gather reads only
         # the gathered rows, not the whole source array).
-        out = {"dot_flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
-               "g_full": 0.0, "g_traffic": 0.0}
+        out = {"dot_flops": 0.0, "ew_flops": 0.0, "bytes": 0.0,
+               "collective_bytes": 0.0, "g_full": 0.0, "g_traffic": 0.0}
         if comp is None:
             return out
         self._memo[comp_name] = out  # cycle guard
@@ -209,6 +245,21 @@ class HloCost:
             for o in self._operand_names(op.rest):
                 b, _ = _shape_info(self.shapes.get(o, ""))
                 opnd_bytes += b
+            if op.opcode in _EW_FLOP:
+                out["ew_flops"] += _elements(op.type_str)
+            elif op.opcode == "reduce":
+                # one combiner application per input element (up to const
+                # factors) — charge operand elements, excluding the inits
+                operands = self._operand_names(op.rest)
+                n_in = max(1, len(operands) // 2)
+                for o in operands[:n_in]:
+                    out["ew_flops"] += _elements(self.shapes.get(o, ""))
+            elif op.opcode == "sort":
+                operands = self._operand_names(op.rest)
+                if operands:
+                    e = _elements(self.shapes.get(operands[0], ""))
+                    if e > 1:
+                        out["ew_flops"] += e * math.log2(e)
             if op.opcode == "while":
                 body = self._attr(op.rest, "body")
                 cond = self._attr(op.rest, "condition")
@@ -218,7 +269,7 @@ class HloCost:
                     self.dynamic_loops += 1
                 sub = self.comp_cost(body) if body else None
                 subc = self.comp_cost(cond) if cond else None
-                for k in ("dot_flops", "bytes", "collective_bytes"):
+                for k in ("dot_flops", "ew_flops", "bytes", "collective_bytes"):
                     out[k] += trips * (
                         (sub[k] if sub else 0.0) + (subc[k] if subc else 0.0)
                     )
@@ -232,14 +283,14 @@ class HloCost:
                             names.extend(re.findall(r"%[\w\-.]+", item))
                 if names:
                     subs = [self.comp_cost(n) for n in names]
-                    for k in ("dot_flops", "bytes", "collective_bytes"):
+                    for k in ("dot_flops", "ew_flops", "bytes", "collective_bytes"):
                         out[k] += max(s[k] for s in subs)
                 continue
             if op.opcode == "call":
                 tgt = self._attr(op.rest, "to_apply")
                 if tgt:
                     sub = self.comp_cost(tgt)
-                    for k in ("dot_flops", "bytes", "collective_bytes"):
+                    for k in ("dot_flops", "ew_flops", "bytes", "collective_bytes"):
                         out[k] += sub[k]
                 continue
             if op.opcode in ("fusion", "custom-call"):
@@ -250,6 +301,7 @@ class HloCost:
                 if tgt:
                     sub = self.comp_cost(tgt)
                     out["dot_flops"] += sub["dot_flops"]
+                    out["ew_flops"] += sub["ew_flops"]
                     g_full, g_traffic = sub["g_full"], sub["g_traffic"]
                 out["bytes"] += res_bytes + max(0.0, opnd_bytes - g_full) + g_traffic
                 continue
@@ -306,6 +358,7 @@ class HloCost:
 
     def entry_cost(self) -> Dict[str, float]:
         c = dict(self.comp_cost(self.entry))
+        c["flops"] = c["dot_flops"] + c["ew_flops"]
         c["dynamic_loops"] = self.dynamic_loops
         return c
 

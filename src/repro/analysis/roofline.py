@@ -12,8 +12,8 @@ Two sources are combined:
   transformer would be 61× under-reported; the analyzer fixes that and is
   the primary source for all three terms (validated against hand counts).
 - ``compiled.cost_analysis()`` — kept as the ``xla_*`` cross-check fields
-  (it adds elementwise FLOPs the dot-based analyzer ignores, but misses
-  loop multiplicity).
+  (no loop multiplicity, but an independent elementwise-FLOP count to
+  sanity-check the analyzer's ``ew_flops`` against).
 
 Dynamic-trip-count loops (the MSF engine's convergence loop) are flagged:
 their numbers are per loop iteration — the paper's own reporting unit
@@ -39,7 +39,7 @@ def roofline(compiled, *, n_devices: int, model_flops: float | None = None,
              hw: Dict = TPU_V5E) -> Dict:
     ca = compiled.cost_analysis() or {}
     res = analyze(compiled.as_text())
-    flops = max(float(res["dot_flops"]), float(ca.get("flops", 0.0)))
+    flops = max(float(res["flops"]), float(ca.get("flops", 0.0)))
     bytes_acc = max(float(res["bytes"]), float(ca.get("bytes accessed", 0.0)))
     coll_total = float(res["collective_bytes"])
 

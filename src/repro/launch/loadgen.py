@@ -1,0 +1,334 @@
+"""Open-loop SLO load harness for the streaming serving path (DESIGN.md §11).
+
+Drives :class:`~repro.stream.service.QueryService` /
+:class:`~repro.stream.service.MicroBatcher` with **open-loop** Poisson
+arrivals — inter-arrival gaps are drawn from a seeded exponential at the
+offered QPS and queries are *admitted on schedule regardless of how the
+server keeps up* (closed-loop harnesses hide overload by slowing the
+client down; an open loop exposes it as queue growth, drops and tail
+latency). Meanwhile a concurrent writer thread keeps mutating the graph
+through the stream plan's ``update``, so the measured latencies include
+snapshot churn, exactly like the serving deployment.
+
+Three actors:
+
+- **producer** (thread): walks the precomputed Poisson arrival schedule
+  and pushes ``(deadline, u, v)`` into a *bounded* admission queue;
+  ``queue.Full`` is a drop (counted, never blocks — open loop);
+- **writer** (thread): inserts edge batches via ``plan.update`` every
+  ``--writer-interval-ms``, wrapping around the edge stream;
+- **consumer** (main thread): pulls admitted queries into the
+  MicroBatcher and flushes either at the micro-batch size or when the
+  queue momentarily empties; per-query end-to-end latency (scheduled
+  arrival → host-resident answer, i.e. including queue wait) goes into a
+  ``repro.obs`` histogram.
+
+The run emits an ``slo-report/v1`` JSON document (offered vs achieved
+QPS, p50/p95/p99, drop/timeout counters, MicroBatcher admission
+metrics) and the process exits nonzero when configured SLO targets are
+missed — the CI smoke gate of the serving path::
+
+    PYTHONPATH=src python -m repro.launch.loadgen --qps 200 --duration 5 \
+        --out SLO_loadgen_smoke.json
+
+Also reachable as ``python -m repro.launch.serve_graph --loadgen ...``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import queue
+import threading
+import time
+
+import numpy as np
+
+SCHEMA = "slo-report/v1"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="loadgen", description="open-loop SLO load harness"
+    )
+    ap.add_argument("--qps", type=float, default=200.0,
+                    help="offered arrival rate (Poisson)")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="seconds of offered load")
+    ap.add_argument("--scale", type=int, default=10,
+                    help="n = 2**scale vertices")
+    ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--micro-batch", type=int, default=256,
+                    help="MicroBatcher window (auto-flush threshold)")
+    ap.add_argument("--queue-cap", type=int, default=4096,
+                    help="admission queue bound; arrivals past it drop")
+    ap.add_argument("--timeout-ms", type=float, default=250.0,
+                    help="per-query latency budget; slower answers count "
+                         "as timeouts (still answered)")
+    ap.add_argument("--writer-batch", type=int, default=512)
+    ap.add_argument("--writer-interval-ms", type=float, default=20.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", metavar="PATH", default=None,
+                    help="write the slo-report/v1 JSON here")
+    ap.add_argument("--slo-p50-ms", type=float, default=250.0)
+    ap.add_argument("--slo-p99-ms", type=float, default=2000.0)
+    ap.add_argument("--max-drop-frac", type=float, default=0.2)
+    ap.add_argument("--min-qps-frac", type=float, default=0.5,
+                    help="achieved/offered QPS floor")
+    return ap
+
+
+def _env() -> dict:
+    import jax
+
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+def _arrival_schedule(rng, qps: float, duration: float) -> np.ndarray:
+    """Poisson arrival offsets (seconds from start) within [0, duration)."""
+    # E[count] = qps * duration; draw with slack, trim at the horizon.
+    draw = max(16, int(qps * duration * 1.5) + 64)
+    offs = np.cumsum(rng.exponential(1.0 / qps, size=draw))
+    while offs[-1] < duration:  # pathological under-draw; extend
+        offs = np.concatenate(
+            [offs, offs[-1] + np.cumsum(rng.exponential(1.0 / qps, size=draw))]
+        )
+    return offs[offs < duration]
+
+
+def run(args) -> dict:
+    from repro import obs
+    from repro.graphs.generators import rmat_graph
+    from repro.launch.serve_graph import undirected_edges
+    from repro.solve import SolveSpec, plan
+    from repro.stream.service import MicroBatcher, QueryService, next_pow2
+
+    obs.enable("metrics")
+    obs.metrics_reset()
+
+    n = 1 << args.scale
+    g = rmat_graph(args.scale, args.edge_factor, seed=args.seed)
+    lo, hi, w = undirected_edges(g)
+    rng = np.random.default_rng(args.seed)
+    perm = rng.permutation(len(lo))
+    lo, hi, w = lo[perm], hi[perm], w[perm]
+
+    stream = plan(
+        n, SolveSpec(mode="stream", batch_capacity=args.writer_batch)
+    )
+    # Seed the forest with the first quarter of the stream (chunked —
+    # insert_batch rejects batches above capacity), leaving the rest for
+    # the concurrent writer to churn through during the run.
+    warm = max(args.writer_batch, len(lo) // 4)
+    for at in range(0, warm, args.writer_batch):
+        end = min(at + args.writer_batch, warm)
+        stream.update(lo[at:end], hi[at:end], w[at:end])
+
+    service = QueryService(stream.engine.snapshots)
+    batcher = MicroBatcher(service, max_queue=args.micro_batch)
+    # Pre-compile every padded query width the run can hit, so arrivals
+    # never pay XLA compilation (that's plan-build cost, not serving SLO).
+    pad = service.pad_floor
+    while True:
+        z = np.zeros(pad, np.int32)
+        service.connected(z, z)
+        if pad >= next_pow2(args.micro_batch, service.pad_floor):
+            break
+        pad *= 2
+
+    hist = obs.histogram("loadgen.e2e_latency_s")
+    dropped = obs.counter("loadgen.dropped")
+    timeouts = obs.counter("loadgen.timeout")
+
+    admission: queue.Queue = queue.Queue(maxsize=args.queue_cap)
+    producer_done = threading.Event()
+    stop_writer = threading.Event()
+    writer_stats = {"updates": 0, "edges": 0}
+
+    offs = _arrival_schedule(rng, args.qps, args.duration)
+    qu = rng.integers(0, n, size=len(offs))
+    qv = rng.integers(0, n, size=len(offs))
+    t_start = time.perf_counter()
+
+    def producer() -> None:
+        for i, off in enumerate(offs):
+            lag = (t_start + off) - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            try:  # never blocks: open loop — overload shows up as drops
+                admission.put_nowait((t_start + off, int(qu[i]), int(qv[i])))
+            except queue.Full:
+                dropped.inc()
+        producer_done.set()
+
+    def writer() -> None:
+        pos = warm
+        interval = args.writer_interval_ms / 1e3
+        while not stop_writer.is_set():
+            if pos >= len(lo):
+                pos = warm  # wrap; duplicate inserts are MSF no-ops
+            end = min(pos + args.writer_batch, len(lo))
+            stream.update(lo[pos:end], hi[pos:end], w[pos:end])
+            writer_stats["updates"] += 1
+            writer_stats["edges"] += end - pos
+            pos = end
+            stop_writer.wait(interval)
+
+    answered = 0
+    pending: list[float] = []  # scheduled arrival times of the open window
+
+    def flush_window() -> None:
+        nonlocal answered
+        if not pending:
+            return
+        batcher.flush()  # idempotent after a MicroBatcher auto-flush
+        t_now = time.perf_counter()
+        for t_arr in pending:
+            lat = t_now - t_arr
+            hist.observe(lat)
+            if lat > args.timeout_ms / 1e3:
+                timeouts.inc()
+        answered += len(pending)
+        pending.clear()
+
+    threads = [threading.Thread(target=producer, daemon=True),
+               threading.Thread(target=writer, daemon=True)]
+    for t in threads:
+        t.start()
+    while True:
+        try:
+            t_arr, u, v = admission.get(timeout=0.02)
+        except queue.Empty:
+            flush_window()  # partial window: bound tail latency
+            if producer_done.is_set() and admission.empty():
+                break
+            continue
+        batcher.ask_connected(u, v)
+        pending.append(t_arr)
+        if len(pending) >= args.micro_batch:
+            flush_window()
+    flush_window()
+    elapsed = time.perf_counter() - t_start
+    stop_writer.set()
+    for t in threads:
+        t.join(timeout=10.0)
+
+    s = hist.summary() or {}
+    snap = obs.metrics_snapshot()
+    n_dropped = int(snap["counters"].get("loadgen.dropped", 0))
+    n_timeout = int(snap["counters"].get("loadgen.timeout", 0))
+    offered = len(offs)
+    achieved_qps = answered / elapsed if elapsed > 0 else 0.0
+    drop_frac = n_dropped / offered if offered else 0.0
+
+    p50_ms = float(s.get("p50", 0.0)) * 1e3
+    p99_ms = float(s.get("p99", 0.0)) * 1e3
+    failures: list[str] = []
+    if p50_ms > args.slo_p50_ms:
+        failures.append(f"p50 {p50_ms:.1f}ms > target {args.slo_p50_ms}ms")
+    if p99_ms > args.slo_p99_ms:
+        failures.append(f"p99 {p99_ms:.1f}ms > target {args.slo_p99_ms}ms")
+    if drop_frac > args.max_drop_frac:
+        failures.append(
+            f"drop fraction {drop_frac:.3f} > target {args.max_drop_frac}"
+        )
+    if achieved_qps < args.min_qps_frac * args.qps:
+        failures.append(
+            f"achieved {achieved_qps:.1f} qps < "
+            f"{args.min_qps_frac:.2f} x offered {args.qps}"
+        )
+
+    batcher_metrics = {
+        k.removeprefix("stream.batcher."): v
+        for k, v in snap["counters"].items()
+        if k.startswith("stream.batcher.")
+    }
+    batcher_metrics["queue_depth"] = snap["gauges"].get(
+        "stream.batcher.queue_depth", 0
+    )
+    return {
+        "schema": SCHEMA,
+        "env": _env(),
+        "config": {k: v for k, v in vars(args).items() if k != "out"},
+        "offered_qps": args.qps,
+        "achieved_qps": achieved_qps,
+        "duration_s": elapsed,
+        "queries": {
+            "offered": offered,
+            "answered": answered,
+            "dropped": n_dropped,
+            "timeouts": n_timeout,
+        },
+        "latency_ms": {
+            "p50": p50_ms,
+            "p95": float(s.get("p95", 0.0)) * 1e3,
+            "p99": p99_ms,
+            "min": float(s.get("min", 0.0)) * 1e3,
+            "max": float(s.get("max", 0.0)) * 1e3,
+            "mean": (float(s["sum"]) / s["count"] * 1e3) if s.get("count")
+            else 0.0,
+            "count": int(s.get("count", 0)),
+        },
+        "writer": {
+            "updates": writer_stats["updates"],
+            "edges_inserted": writer_stats["edges"],
+            "snapshot_version": service.snapshot_version(),
+        },
+        "batcher": batcher_metrics,
+        "slo": {
+            "targets": {
+                "p50_ms": args.slo_p50_ms,
+                "p99_ms": args.slo_p99_ms,
+                "max_drop_frac": args.max_drop_frac,
+                "min_qps_frac": args.min_qps_frac,
+            },
+            "failures": failures,
+            "passed": not failures,
+        },
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    report = run(args)
+    lat = report["latency_ms"]
+    print(
+        f"offered {report['offered_qps']:.0f} qps for "
+        f"{report['duration_s']:.1f}s -> achieved "
+        f"{report['achieved_qps']:.1f} qps; "
+        f"p50={lat['p50']:.1f}ms p95={lat['p95']:.1f}ms "
+        f"p99={lat['p99']:.1f}ms "
+        f"(answered {report['queries']['answered']}, "
+        f"dropped {report['queries']['dropped']}, "
+        f"timeouts {report['queries']['timeouts']})"
+    )
+    print(
+        f"writer: {report['writer']['updates']} updates, "
+        f"{report['writer']['edges_inserted']} edges, snapshot "
+        f"v{report['writer']['snapshot_version']}; "
+        f"batcher: {report['batcher']}"
+    )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"# slo report written to {args.out}")
+    slo = report["slo"]
+    if slo["passed"]:
+        print("SLO: PASS")
+        return 0
+    print("SLO: FAIL")
+    for msg in slo["failures"]:
+        print(f"  {msg}")
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

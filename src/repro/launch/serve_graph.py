@@ -9,10 +9,14 @@ accumulated edge set.
 
   PYTHONPATH=src python -m repro.launch.serve_graph --scale 12 --edge-factor 8 \
       --batch-size 2048 --queries-per-batch 8192
+
+``--loadgen`` switches to the open-loop SLO harness instead (all other
+flags are forwarded to ``repro.launch.loadgen``, DESIGN.md §11).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
@@ -27,7 +31,14 @@ def undirected_edges(g):
     return src[sel], dst[sel], w[sel]
 
 
-def main():
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if "--loadgen" in argv:
+        from repro.launch.loadgen import main as loadgen_main
+
+        raise SystemExit(
+            loadgen_main([a for a in argv if a != "--loadgen"])
+        )
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=12, help="n = 2**scale vertices")
     ap.add_argument("--edge-factor", type=int, default=8)
@@ -41,7 +52,7 @@ def main():
     ap.add_argument("--metrics-every", type=int, default=0, metavar="K",
                     help="if >0, dump the obs metrics snapshot (incl. "
                          "query-latency p50/p95/p99) every K batches")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.batch_size < 1:
         ap.error("--batch-size must be >= 1")
     if args.queries_per_batch < 1:

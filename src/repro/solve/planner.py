@@ -171,6 +171,13 @@ def plan(target, spec: SolveSpec | None = None, *, mesh=None, **overrides) -> "P
             # drivers (dist mode traces the whole shard_map program here).
             with obs.span("plan.build", mode=spec.mode):
                 engine = edef.builder(target, resolved, mesh)
+                # Analytic cost of the executable this engine runs
+                # (flat / coarsen scope; best-effort). Stored on the
+                # engine so cache hits reuse the analysis with the
+                # compiled machinery.
+                from repro.solve.cost import plan_cost
+
+                engine._plan_cost = plan_cost(spec.mode, target, resolved)
             if key is not None:
                 _cache_put(key, engine)
     return Plan(spec=spec, resolved=resolved, target=target, mesh=mesh, engine=engine)
@@ -209,20 +216,35 @@ class Plan:
         is still ``solve()``/``update()``/``query()``."""
         return getattr(self._engine, "engine", self._engine)
 
+    @property
+    def cost(self):
+        """Analytic :class:`~repro.solve.cost.PlanCost` of this plan's
+        executable, computed once at build (``None`` when out of the
+        analyzer's scope — dist/stream — or on analysis failure)."""
+        return getattr(self._engine, "_plan_cost", None)
+
+    def _attach_cost(self, rep):
+        if isinstance(rep, SolveReport) and rep.cost is None:
+            c = self.cost
+            if c is not None:
+                rep = rep._replace(cost=c)
+        return rep
+
     def _observed(self, what: str, call):
         """Run one engine call under this spec's ``obs`` scope: a
         ``solve.<mode>[.<what>]`` span, and — for SolveReport-shaped
         results — the per-phase ``timings`` aggregation. The fully-off
-        path (global mode off, spec knob off) is two attribute checks."""
+        path (global mode off, spec knob off) is two attribute checks
+        plus the zero-work cost attach (a NamedTuple ``_replace``)."""
         if not obs.metrics_active() and self.spec.obs == "off":
-            return call()
+            return self._attach_cost(call())
         name = f"solve.{self.spec.mode}" + (f".{what}" if what else "")
         with obs.enabled(self.spec.obs):
             with obs.collect_timings() as t, obs.span(name):
                 rep = call()
             if t and isinstance(rep, SolveReport):
                 rep = rep._replace(timings=dict(t))
-        return rep
+        return self._attach_cost(rep)
 
     def solve(self, *args, **kw) -> SolveReport:
         """Run the full solve for this plan's target. Dist plans accept

@@ -7,8 +7,10 @@ the union of what callers actually consume — forest weight, the chosen
 global eids, component labels, iteration count, the per-level coarsening
 rows, the two operational counters (host round-trips, recompiles), and
 the per-phase wall-clock breakdown (``timings``, filled when the spec's
-``obs`` knob is on — DESIGN.md §10) — plus the engine-native result
-under ``raw`` for anything mode-specific.
+``obs`` knob is on — DESIGN.md §10), and the analytic ``cost`` of the
+plan's executable (``repro.solve.cost.PlanCost``, computed once at
+``plan.build`` — DESIGN.md §11) — plus the engine-native result under
+``raw`` for anything mode-specific.
 """
 from __future__ import annotations
 
@@ -31,6 +33,7 @@ class SolveReport(NamedTuple):
     recompiles: int  # distinct executables compiled (stream mode)
     raw: Any  # engine-native result (MSFResult / UpdateStats / ...)
     timings: Dict[str, float] = {}  # span name -> seconds; {} when obs off
+    cost: Any = None  # PlanCost of the plan's executable; None off-scope
 
     @property
     def n_components(self) -> int:

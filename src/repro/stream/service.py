@@ -123,6 +123,14 @@ class MicroBatcher:
     list of results in ticket order. Auto-flushes when the queue reaches
     ``max_queue``; asking again after a flush starts a new window and
     invalidates older tickets (``result`` raises ``KeyError`` on them).
+
+    When ``repro.obs`` metrics mode is on, the batcher reports its
+    admission state (DESIGN.md §11): ``stream.batcher.queue_depth``
+    (gauge — pending queries in the open window),
+    ``stream.batcher.overflow`` (counter — windows force-flushed at
+    ``max_queue``, the backpressure events that were invisible before),
+    and ``stream.batcher.flush`` / ``stream.batcher.flushed_queries``
+    (counters). The loadgen SLO report surfaces them.
     """
 
     def __init__(self, service: QueryService, max_queue: int = 4096):
@@ -133,16 +141,24 @@ class MicroBatcher:
         self._results: List[bool] | None = None
 
     def ask_connected(self, u: int, v: int) -> Tuple[int, int]:
+        from repro import obs
+
         if self._results is not None:  # start a new window
             self._window += 1
             self._pairs, self._results = [], None
         self._pairs.append((int(u), int(v)))
         ticket = (self._window, len(self._pairs) - 1)
+        if obs.metrics_active():
+            obs.gauge("stream.batcher.queue_depth").set(len(self._pairs))
         if len(self._pairs) >= self.max_queue:
+            if obs.metrics_active():
+                obs.counter("stream.batcher.overflow").inc()
             self.flush()
         return ticket
 
     def flush(self) -> List[bool]:
+        from repro import obs
+
         if self._results is not None:
             return self._results
         if not self._pairs:
@@ -151,6 +167,10 @@ class MicroBatcher:
         arr = np.asarray(self._pairs, np.int32)
         conn = self.service.connected(arr[:, 0], arr[:, 1])
         self._results = [bool(x) for x in conn]
+        if obs.metrics_active():
+            obs.counter("stream.batcher.flush").inc()
+            obs.counter("stream.batcher.flushed_queries").inc(len(self._results))
+            obs.gauge("stream.batcher.queue_depth").set(0)
         return self._results
 
     def result(self, ticket: Tuple[int, int]) -> bool:

@@ -1,0 +1,200 @@
+"""CI gate: compare a bench run against committed baselines.
+
+Usage::
+
+    python tools/check_bench_regression.py \
+        --baseline benchmarks/baselines --current <run-dir-or-file> \
+        [--tolerance 0.5] [--update] [--history DIR]
+
+``--current`` is a ``bench-rows/v2`` document (``BENCH_*.json``) or a
+directory of them; each maps to ``<baseline-dir>/<stem>.json`` where the
+stem drops the ``BENCH_`` prefix (``BENCH_solve_smoke.json`` →
+``solve_smoke.json``).
+
+Decision rule (DESIGN.md §11) — a time row (``unit == "us"``) regresses
+iff **both** hold:
+
+1. ``cur.median > base.median * (1 + tolerance)`` — the relative gate,
+   sized for shared-runner noise (default 0.5 = 50%);
+2. ``cur.median > base.median + base.iqr`` — the new median falls
+   outside the baseline's own inter-quartile spread, so the move is
+   larger than the baseline's recorded run-to-run noise.
+
+Explicit non-failure semantics, reported per file:
+
+- **first-run**: no committed baseline → pass (create it with
+  ``--update``);
+- **env-skip**: baseline backend or device_count differs from the
+  current run → comparison is meaningless, skip;
+- **new-row / gone-row**: rows added or removed are reported, never
+  failed — renames land as an explicit baseline update in the same PR;
+- non-time rows (speedups, byte volumes, counts) are provenance, not
+  gates.
+
+``--update`` rewrites the baselines from the current run (the committed
+refresh path). ``--history DIR`` additionally appends every current
+document to the append-only history store (``benchmarks/history.py``).
+Exit codes: 0 ok/skip/first-run, 1 regression, 2 usage error.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# repo root (parent of tools/) — so `python tools/check_bench_regression.py`
+# finds the benchmarks/ namespace package without PYTHONPATH gymnastics
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+_PREFIX = "BENCH_"
+DEFAULT_TOLERANCE = 0.5
+
+
+def baseline_stem(current_path: str) -> str:
+    name = os.path.basename(current_path)
+    if name.startswith(_PREFIX):
+        name = name[len(_PREFIX):]
+    return name
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc.get("rows"), list):
+        raise ValueError(f"{path}: not a bench-rows document (no rows list)")
+    return doc
+
+
+def _env(doc: dict) -> tuple[str, int]:
+    env = doc.get("env", {})
+    return (
+        str(env.get("backend", doc.get("backend", "unknown"))),
+        int(env.get("device_count", doc.get("device_count", 0))),
+    )
+
+
+def _time_rows(doc: dict) -> dict[str, dict]:
+    return {
+        r["name"]: r
+        for r in doc["rows"]
+        if r.get("unit", "us") == "us" and "median" in r
+    }
+
+
+def check_doc(
+    base: dict, cur: dict, *, tolerance: float = DEFAULT_TOLERANCE
+) -> tuple[str, list[str]]:
+    """Compare two bench documents.
+
+    Returns ``(status, messages)`` with status one of ``"ok"``,
+    ``"env-skip"``, ``"regression"``.
+    """
+    if _env(base) != _env(cur):
+        return "env-skip", [
+            f"env mismatch: baseline {_env(base)} vs current {_env(cur)}"
+        ]
+    b_rows, c_rows = _time_rows(base), _time_rows(cur)
+    msgs: list[str] = []
+    regressed = False
+    for name, c in sorted(c_rows.items()):
+        b = b_rows.get(name)
+        if b is None:
+            msgs.append(f"  new-row  {name}: {c['median']:.1f}us (no baseline)")
+            continue
+        b_med, c_med = float(b["median"]), float(c["median"])
+        b_iqr = float(b.get("iqr", 0.0))
+        rel_gate = c_med > b_med * (1.0 + tolerance)
+        iqr_gate = c_med > b_med + b_iqr
+        ratio = c_med / b_med if b_med > 0 else float("inf")
+        if rel_gate and iqr_gate:
+            regressed = True
+            msgs.append(
+                f"  REGRESSION {name}: {c_med:.1f}us vs baseline "
+                f"{b_med:.1f}us (+iqr {b_iqr:.1f}us) = {ratio:.2f}x "
+                f"(tolerance {1.0 + tolerance:.2f}x)"
+            )
+        else:
+            msgs.append(f"  ok       {name}: {c_med:.1f}us "
+                        f"({ratio:.2f}x of {b_med:.1f}us)")
+    for name in sorted(set(b_rows) - set(c_rows)):
+        msgs.append(f"  gone-row {name}: in baseline, absent from run")
+    return ("regression" if regressed else "ok"), msgs
+
+
+def _current_files(current: str) -> list[str]:
+    if os.path.isdir(current):
+        return sorted(
+            os.path.join(current, f)
+            for f in os.listdir(current)
+            if f.startswith(_PREFIX) and f.endswith(".json")
+        )
+    return [current]
+
+
+def main(argv: list[str]) -> int:
+    from benchmarks.common import flag_value
+
+    baseline_dir = flag_value(argv, "--baseline")
+    current = flag_value(argv, "--current")
+    if baseline_dir is None or current is None:
+        print(__doc__, file=sys.stderr)
+        return 2
+    tol_s = flag_value(argv, "--tolerance")
+    tolerance = float(tol_s) if tol_s is not None else DEFAULT_TOLERANCE
+    if tolerance < 0:
+        print("--tolerance must be >= 0", file=sys.stderr)
+        return 2
+    update = "--update" in argv
+    history_dir = flag_value(argv, "--history")
+
+    files = _current_files(current)
+    if not files:
+        print(f"{current}: no {_PREFIX}*.json documents found",
+              file=sys.stderr)
+        return 2
+
+    failed = False
+    for path in files:
+        try:
+            cur = _load(path)
+        except (OSError, ValueError) as e:
+            print(f"{path}: cannot load: {e}", file=sys.stderr)
+            return 2
+        stem = baseline_stem(path)
+        bpath = os.path.join(baseline_dir, stem)
+        if history_dir:
+            from benchmarks.history import append
+
+            append(history_dir, stem.removesuffix(".json"), cur)
+        if not os.path.exists(bpath):
+            if update:
+                os.makedirs(baseline_dir, exist_ok=True)
+                with open(bpath, "w") as f:
+                    json.dump(cur, f, indent=1, sort_keys=True)
+                print(f"{path}: first-run, baseline created at {bpath}")
+            else:
+                print(f"{path}: first-run, no baseline at {bpath} "
+                      f"(pass; commit one with --update)")
+            continue
+        try:
+            base = _load(bpath)
+        except (OSError, ValueError) as e:
+            print(f"{bpath}: cannot load baseline: {e}", file=sys.stderr)
+            return 2
+        status, msgs = check_doc(base, cur, tolerance=tolerance)
+        print(f"{path} vs {bpath}: {status}")
+        for m in msgs:
+            print(m)
+        if status == "regression":
+            failed = True
+        elif update:
+            with open(bpath, "w") as f:
+                json.dump(cur, f, indent=1, sort_keys=True)
+            print(f"  baseline refreshed at {bpath}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
