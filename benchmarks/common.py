@@ -96,6 +96,22 @@ def from_samples(
     )
 
 
+def measure_samples(fn, *args, warmup: int = 1, iters: int = 3) -> list:
+    """Raw post-warmup wall-clock samples (seconds) of ``fn(*args)``,
+    blocking on device results — the shared timing core of
+    :func:`measure` / :func:`timeit`, and the measurement harness the
+    SolveSpec autotuner (``repro.solve.tune``, DESIGN.md §12) runs its
+    candidates under."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return ts
+
+
 def measure(
     name: str,
     fn,
@@ -106,13 +122,7 @@ def measure(
     per: float = 1.0,
 ) -> Measurement:
     """Time ``fn(*args)`` (blocking on device results) into a Measurement."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
+    ts = measure_samples(fn, *args, warmup=warmup, iters=iters)
     return from_samples(name, ts, warmup=warmup, derived=derived, per=per)
 
 
@@ -129,14 +139,8 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall-time (seconds) of jitted fn(*args), post-warmup —
     the scalar core of :func:`measure`, kept for ratio rows that need
     raw seconds (speedup numerators/denominators)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return float(np.median(measure_samples(fn, *args, warmup=warmup,
+                                           iters=iters)))
 
 
 def eid_set(r) -> set:

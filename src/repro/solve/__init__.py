@@ -22,12 +22,26 @@ _PLANNER_NAMES = (
     "PLAN_CACHE_MAXSIZE",
 )
 
+# Autotuner surface (repro.solve.tune, DESIGN.md §12) — lazy like the
+# planner so `import repro.solve` stays engine-free. The `tune()`
+# entry point itself lives on the submodule (`repro.solve.tune.tune`):
+# re-exporting it here would shadow the submodule attribute of the
+# same name.
+_TUNE_NAMES = (
+    "TuningDB",
+    "TuningDBError",
+    "TuneKey",
+    "set_tuning_db",
+    "get_tuning_db",
+)
+
 __all__ = [
     "SolveSpec",
     "ResolvedSpec",
     "SolveReport",
     "report_from_msf_result",
     *_PLANNER_NAMES,
+    *_TUNE_NAMES,
 ]
 
 
@@ -37,4 +51,8 @@ def __getattr__(name):
         from repro.solve import planner
 
         return getattr(planner, name)
+    if name in _TUNE_NAMES:
+        import importlib
+
+        return getattr(importlib.import_module("repro.solve.tune"), name)
     raise AttributeError(f"module 'repro.solve' has no attribute {name!r}")

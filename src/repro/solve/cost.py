@@ -56,6 +56,30 @@ class PlanCost(NamedTuple):
         return d
 
 
+def predicted_time_s(
+    cost: Optional[PlanCost], *, iterations: int = 1
+) -> Optional[float]:
+    """Analytic roofline time of a plan's executable on the reference
+    accelerator (TPU v5e constants — the same chip every bench row's
+    ``roofline_frac`` is quoted against), in seconds.
+
+    Per-iteration costs (``dynamic_loops > 0``) are multiplied by the
+    ``iterations`` hint. This is the autotuner's pre-measurement pruning
+    metric (DESIGN.md §12): only the *ordering* matters, and only at
+    order-of-magnitude granularity — the tuner's generous keep-ratio
+    absorbs the model error. ``None`` in, ``None`` out.
+    """
+    if cost is None:
+        return None
+    from repro.analysis.roofline import TPU_V5E
+
+    mult = max(int(iterations), 1) if cost.dynamic_loops else 1
+    return mult * max(
+        cost.flops / TPU_V5E["peak_flops_bf16"],
+        cost.bytes / TPU_V5E["hbm_bw"],
+    )
+
+
 def _from_analysis(c: dict, analyzed: str) -> PlanCost:
     return PlanCost(
         flops=float(c["flops"]),

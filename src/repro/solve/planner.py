@@ -151,7 +151,9 @@ def plan(target, spec: SolveSpec | None = None, *, mesh=None, **overrides) -> "P
         raise ValueError("mode='dist' needs a mesh= (jax Mesh over the 2D grid)")
     with obs.enabled(spec.obs):
         with obs.span("plan.resolve", mode=spec.mode):
-            resolved = spec.resolve(target)
+            # mesh only keys the tuning-DB lookup (dist entries are
+            # bucketed per mesh shape); heuristic resolution ignores it.
+            resolved = spec.resolve(target, mesh=mesh)
         engine = None
         key = None
         if edef.cacheable:

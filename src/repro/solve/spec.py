@@ -47,6 +47,15 @@ MODES = ("flat", "coarsen", "dist", "stream")
 #: trace events (and take per-phase device-sync'd code paths where a
 #: fused executable would otherwise hide the phases).
 OBS_MODES = ("off", "metrics", "trace")
+#: Tuning-database consultation levels of the ``tuning`` knob
+#: (DESIGN.md §12): "off" = the hand-written heuristics below, "db" =
+#: consult the active ``tuning-db/v1`` database first (exact key, then
+#: nearest shape bucket) and fall back to the heuristics when it is
+#: missing/invalid/non-matching, "measure" = tune the target on first
+#: resolve and cache the winner in the in-process database. The knob is
+#: part of the spec (and therefore of every resolved plan-cache key), so
+#: parity suites can pin behavior with ``tuning="off"``.
+TUNING_MODES = ("off", "db", "measure")
 #: Modes added by ``repro.solve.register_engine`` beyond the built-ins.
 #: Mode-specific validation below only applies to the built-in modes; a
 #: registered engine owns its own validation.
@@ -185,6 +194,9 @@ class SolveSpec:
     # around every Plan.solve()/update()/query() of this spec; "trace"
     # also fills SolveReport.timings and the exportable trace buffer.
     obs: str = "off"
+    # tuning-database consultation: "off" | "db" | "measure"
+    # (DESIGN.md §12, ``repro.solve.tune``).
+    tuning: str = "off"
 
     def __post_init__(self):
         from repro.coarsen.config import (
@@ -200,6 +212,13 @@ class SolveSpec:
         if self.obs not in OBS_MODES:
             raise ValueError(
                 f"unknown obs mode {self.obs!r} (expected one of {OBS_MODES})"
+            )
+        # tuning is resolve-layer infrastructure, validated for
+        # registered modes too (the lookup is keyed by mode string).
+        if self.tuning not in TUNING_MODES:
+            raise ValueError(
+                f"unknown tuning mode {self.tuning!r} "
+                f"(expected one of {TUNING_MODES})"
             )
         if self.coarsen is True:  # convenience: True → defaults
             object.__setattr__(self, "coarsen", CoarsenConfig())
@@ -259,19 +278,33 @@ class SolveSpec:
 
     # ------------------------------------------------------------------
 
-    def resolve(self, target=None, *, backend: str | None = None) -> "ResolvedSpec":
+    def resolve(
+        self, target=None, *, backend: str | None = None, mesh=None
+    ) -> "ResolvedSpec":
         """Turn auto knobs into concrete backend choices for ``target``.
 
         ``target`` is whatever :func:`repro.solve.plan` compiles against:
         a ``Graph`` (flat/coarsen/stream), a ``Partition2D`` (dist), an
         ``int`` vertex count (stream), or ``None`` (static resolution
         only). Every data-dependent validation and auto-detection lives
-        here — engines receive concrete values.
+        here — engines receive concrete values. With ``tuning != "off"``
+        the persisted tuning database is consulted first
+        (``repro.solve.tune``, DESIGN.md §12): a compatible winner fills
+        the knobs the user left on auto, and everything below resolves
+        the *effective* spec; on any DB failure the heuristics run
+        untouched. ``mesh`` only keys the tuning lookup (dist plans).
         """
         from repro.coarsen.config import CoarsenConfig
 
         backend = backend or jax.default_backend()
-        pack = self.pack
+        eff = self
+        if self.tuning != "off":
+            from repro.solve.tune import resolve_overrides
+
+            tuned = resolve_overrides(self, target, backend, mesh)
+            if tuned is not None:
+                eff = tuned
+        pack = eff.pack
         if pack is None:
             if self.mode == "stream":
                 # Stream keeps None — its engine tracks packability per
@@ -285,15 +318,15 @@ class SolveSpec:
                 pack = auto_pack(*arrays) if arrays is not None else False
         if self.mode == "stream" and pack is True and target is not None:
             n = _stream_n(target)
-            union = (n - 1) + self.batch_capacity
+            union = (n - 1) + eff.batch_capacity
             if union >= PACK_IDX_MASK:
                 raise ValueError(
                     f"pack=True needs union eids < 2^24 - 1; (n - 1) + "
                     f"batch_capacity = {union} overflows the pack32 index "
                     f"field"
                 )
-        shortcut = self.shortcut or ("csp" if self.mode == "dist" else "complete")
-        coarsen = self.coarsen
+        shortcut = eff.shortcut or ("csp" if self.mode == "dist" else "complete")
+        coarsen = eff.coarsen
         if coarsen is None and self.mode in ("coarsen",):
             coarsen = CoarsenConfig()
         if coarsen is not None:
@@ -306,21 +339,25 @@ class SolveSpec:
             # forcing an explicit pack onto the level kernels would run
             # pack32 on data the levels never validated.
             merged = {}
-            if self.segmin is not None:
-                merged["segmin"] = self.segmin
-            if self.dedupe != "auto":
-                merged["dedupe"] = self.dedupe
-            if self.fused is not None:
-                merged["fused"] = self.fused
+            if eff.segmin is not None:
+                merged["segmin"] = eff.segmin
+            if eff.dedupe != "auto":
+                merged["dedupe"] = eff.dedupe
+            if eff.fused is not None:
+                merged["fused"] = eff.fused
             if merged:
                 coarsen = dataclasses.replace(coarsen, **merged)
+        # spec=eff, not self: engines read knobs through rs.spec, and the
+        # plan-cache key must reflect the knobs actually in effect (eff
+        # keeps self.tuning, so "db" and "off" never share a key even
+        # when the database is empty).
         return ResolvedSpec(
-            spec=self,
+            spec=eff,
             backend=backend,
             pack=pack,
             shortcut=shortcut,
-            segmin_flat=resolve_flat_segmin(self.segmin, bool(pack)),
-            dedupe=resolve_dedupe(self.dedupe, backend),
+            segmin_flat=resolve_flat_segmin(eff.segmin, bool(pack)),
+            dedupe=resolve_dedupe(eff.dedupe, backend),
             coarsen=coarsen,
         )
 

@@ -1,0 +1,328 @@
+"""Tier-1 tests of the SolveSpec autotuner + tuning database
+(``repro.solve.tune``, DESIGN.md §12): key bucketing, DB round-trip and
+nearest-bucket lookup, loud stale-schema rejection with quiet
+resolve-time fallback, tuner determinism under an injected timer,
+cost-pruning safety against real measurements, and plan-cache key
+separation of ``tuning="db"`` vs ``"off"``."""
+import json
+import os
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.graphs.generators import (  # noqa: E402
+    components_graph,
+    grid_road_graph,
+    rmat_graph,
+)
+from repro.solve import (  # noqa: E402
+    SolveSpec,
+    clear_plan_cache,
+    plan,
+    plan_cache_info,
+    set_tuning_db,
+)
+from repro.solve.tune import (  # noqa: E402
+    MAX_BUCKET_DISTANCE,
+    SCHEMA,
+    TuneKey,
+    TuningDB,
+    TuningDBError,
+    enumerate_candidates,
+    key_for,
+    parse_shape_class,
+    prune_by_cost,
+    shape_class,
+    spec_knobs,
+    tune,
+)
+
+
+@pytest.fixture(autouse=True)
+def _no_active_db():
+    """Every test starts and ends with no active tuning DB (the module
+    state is process-global)."""
+    set_tuning_db(None)
+    yield
+    set_tuning_db(None)
+
+
+def _eids(rep):
+    return set(np.asarray(rep.msf_eids)[: int(rep.n_msf_edges)].tolist())
+
+
+# ---------------------------------------------------------------------------
+# keys
+# ---------------------------------------------------------------------------
+
+def test_shape_class_buckets_and_roundtrip():
+    assert shape_class(256, 1024) == "n8d2"
+    assert shape_class(1, 0) == "n0d0"
+    # ~sqrt(2)x wiggle shares a bucket; 2x moves one bucket
+    assert shape_class(256, 1024) == shape_class(300, 1200)
+    assert parse_shape_class(shape_class(2**12, 2**15)) == (12, 3)
+    assert parse_shape_class("bogus") is None
+
+
+def test_key_for_graph():
+    g = rmat_graph(7, 4, seed=9)
+    key = key_for("flat", g)
+    assert key.shape_class == shape_class(g.n, len(np.asarray(g.src)))
+    assert key.mode == "flat"
+    assert key.weights in ("int", "float")
+    assert key.mesh == ""
+    with pytest.raises(ValueError):
+        key_for("flat", object())
+
+
+# ---------------------------------------------------------------------------
+# database: round-trip, nearest bucket, loud schema rejection
+# ---------------------------------------------------------------------------
+
+def _key(shape="n8d2", mode="flat", **over):
+    base = dict(shape_class=shape, weights="int", mode=mode,
+                backend="cpu", device_count=1, mesh="")
+    base.update(over)
+    return TuneKey(**base)
+
+
+def test_db_roundtrip(tmp_path):
+    db = TuningDB()
+    db.put(_key(), {"pack": True, "shortcut": "csp"}, {"median_us": 10.0})
+    path = db.save(str(tmp_path / "v1.json"))
+    doc = json.load(open(path))
+    assert doc["schema"] == SCHEMA
+    assert "backend" in doc["env"]
+    back = TuningDB.load(path)
+    assert len(back) == 1
+    entry, exact = back.lookup(_key())
+    assert exact and entry.knobs == {"pack": True, "shortcut": "csp"}
+    assert entry.stats["median_us"] == 10.0
+
+
+def test_db_nearest_bucket_lookup():
+    db = TuningDB()
+    db.put(_key("n7d2"), {"shortcut": "csp"})
+    db.put(_key("n6d2"), {"shortcut": "complete"})
+    # exact wins
+    assert db.lookup(_key("n7d2"))[1] is True
+    # n8d3 is distance 2 from n7d2, distance 3 from n6d2 → nearest wins
+    entry, exact = db.lookup(_key("n8d3"))
+    assert not exact and entry.knobs == {"shortcut": "csp"}
+    # beyond MAX_BUCKET_DISTANCE → no match
+    far = _key(f"n{8 + MAX_BUCKET_DISTANCE + 7}d2")
+    assert db.lookup(far) is None
+    # any non-shape field mismatch disqualifies even an adjacent bucket
+    assert db.lookup(_key("n7d2", weights="float")) is None
+    assert db.lookup(_key("n7d2", mode="coarsen")) is None
+    assert db.lookup(_key("n7d2", device_count=8)) is None
+
+
+def test_db_stale_schema_rejected_loudly(tmp_path):
+    path = tmp_path / "stale.json"
+    path.write_text(json.dumps({"schema": "tuning-db/v0", "entries": []}))
+    with pytest.raises(TuningDBError, match="tuning-db/v0"):
+        TuningDB.load(str(path))
+    with pytest.raises(TuningDBError):
+        set_tuning_db(str(path))
+    with pytest.raises(TuningDBError, match="malformed"):
+        TuningDB.from_doc({"schema": SCHEMA, "entries": [{"key": {}}]})
+
+
+def test_resolve_falls_back_on_invalid_env_db(tmp_path, monkeypatch):
+    """An unreadable REPRO_TUNING_DB warns once and resolves like
+    tuning="off" — a bad cache must never fail a solve."""
+    path = tmp_path / "stale.json"
+    path.write_text(json.dumps({"schema": "tuning-db/v0", "entries": []}))
+    monkeypatch.setenv("REPRO_TUNING_DB", str(path))
+    set_tuning_db(None)  # drop the memoized env load
+    g = rmat_graph(6, 4, seed=3)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rs_db = SolveSpec(mode="flat", tuning="db").resolve(g)
+        SolveSpec(mode="flat", tuning="db").resolve(g)
+    assert [w for w in caught if issubclass(w.category, RuntimeWarning)], \
+        "invalid env DB should warn"
+    rs_off = SolveSpec(mode="flat", tuning="off").resolve(g)
+    # identical knob resolution — only the tuning field differs
+    assert rs_db.pack == rs_off.pack
+    assert rs_db.spec.shortcut == rs_off.spec.shortcut
+
+
+# ---------------------------------------------------------------------------
+# the tuner
+# ---------------------------------------------------------------------------
+
+def _fake_timer():
+    """Deterministic injected clock: each candidate's 'latency' is a
+    stable hash of its knobs, so two tune() runs see identical
+    measurements without touching the real clock."""
+    def timer(spec, solve_fn):
+        h = abs(hash(json.dumps(spec_knobs(spec), sort_keys=True,
+                                default=str))) % 1000
+        base = 1e-4 + h * 1e-7
+        return [base, base * 1.01, base * 0.99]
+    return timer
+
+
+def test_tune_determinism_fixed_seed():
+    g = rmat_graph(6, 4, seed=1)
+    kw = dict(space="smoke", seed=7, timer=_fake_timer())
+    r1 = tune(g, "flat", **kw)
+    r2 = tune(g, "flat", **kw)
+    assert [spec_knobs(r.spec) for r in r1.ranking] == \
+        [spec_knobs(r.spec) for r in r2.ranking]
+    assert [r.median_us for r in r1.ranking] == \
+        [r.median_us for r in r2.ranking]
+    assert spec_knobs(r1.winner) == spec_knobs(r2.winner)
+
+
+def test_tune_persists_winner_and_db_resolution_uses_it():
+    g = rmat_graph(6, 4, seed=2)
+    db = TuningDB()
+    res = tune(g, "flat", db=db, space="smoke", timer=_fake_timer())
+    assert res.entry is not None and len(db) == 1
+    assert res.entry.key == key_for("flat", g)
+    set_tuning_db(db)
+    rs = SolveSpec(mode="flat", tuning="db").resolve(g)
+    knobs = spec_knobs(res.winner)
+    assert rs.spec.shortcut == knobs["shortcut"]
+    assert rs.pack == knobs["pack"]
+    # an explicitly pinned knob beats the stored winner
+    other = "complete" if knobs["shortcut"] != "complete" else "csp"
+    rs_pin = SolveSpec(mode="flat", shortcut=other, tuning="db").resolve(g)
+    assert rs_pin.spec.shortcut == other
+
+
+def test_tune_db_parity_flat_and_coarsen():
+    """tuning="db" must return the identical forest, whatever the DB
+    elected (the CI gate's contract, in-process)."""
+    g = grid_road_graph(12, 12, seed=2)
+    db = TuningDB()
+    for mode in ("flat", "coarsen"):
+        tune(g, mode, db=db, space="smoke", iters=1, warmup=1)
+    set_tuning_db(db)
+    for mode in ("flat", "coarsen"):
+        r_off = plan(g, SolveSpec(mode=mode, tuning="off")).solve()
+        r_db = plan(g, SolveSpec(mode=mode, tuning="db")).solve()
+        assert abs(float(r_off.weight) - float(r_db.weight)) <= max(
+            1.0, 1e-6 * abs(float(r_off.weight)))
+        assert _eids(r_off) == _eids(r_db), mode
+
+
+def test_pruning_never_discards_measured_winner():
+    """The cost model may only drop order-of-magnitude losers: on the
+    property-suite graph classes, measuring ALL candidates must elect a
+    winner the pruned sweep kept (or one within noise of a kept one)."""
+    for g in (rmat_graph(6, 4, seed=9), grid_road_graph(10, 10, seed=2),
+              components_graph(4, 16, seed=5)):
+        cands = enumerate_candidates(g, "flat", space="smoke")
+        kept, _ = prune_by_cost(g, cands)
+        kept_knobs = [json.dumps(spec_knobs(s.spec), sort_keys=True,
+                                 default=str) for s in kept]
+        full = tune(g, "flat", space="smoke", ratio=float("inf"),
+                    min_keep=len(cands), iters=2, warmup=1)
+        winner = json.dumps(spec_knobs(full.winner), sort_keys=True,
+                            default=str)
+        if winner not in kept_knobs:
+            # noise tolerance: a kept candidate within 10% of the
+            # measured best also satisfies the contract
+            best_us = full.ranking[0].median_us
+            kept_us = [r.median_us for r in full.ranking
+                       if json.dumps(spec_knobs(r.spec), sort_keys=True,
+                                     default=str) in kept_knobs]
+            assert kept_us and min(kept_us) <= best_us * 1.10, \
+                f"pruning discarded the measured winner {winner}"
+
+
+def test_enumerate_candidates_validation():
+    g = rmat_graph(5, 4, seed=4)
+    cands = enumerate_candidates(g, "flat", space="smoke")
+    assert cands and all(c.tuning == "off" for c in cands)
+    # the smoke space is a strict subset of the full sweep
+    assert len(enumerate_candidates(g, "flat", space="full")) > len(cands)
+    with pytest.raises(ValueError, match="space"):
+        enumerate_candidates(g, "flat", space="huge")
+    with pytest.raises(ValueError, match="modes"):
+        enumerate_candidates(g, "stream")
+
+
+def test_tuning_spec_validation():
+    with pytest.raises(ValueError, match="tuning"):
+        SolveSpec(mode="flat", tuning="sometimes")
+    for v in ("off", "db", "measure"):
+        assert SolveSpec(mode="flat", tuning=v).tuning == v
+
+
+# ---------------------------------------------------------------------------
+# plan-cache interaction
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_distinguishes_tuning_modes():
+    """tuning="db" and "off" must never share a plan-cache entry, even
+    when the DB is empty and both resolve to the same knobs — a later
+    set_tuning_db must not be masked by a stale cached plan."""
+    g = rmat_graph(6, 4, seed=6)
+    clear_plan_cache()
+    plan(g, SolveSpec(mode="flat", tuning="off"))
+    n_after_off = plan_cache_info()[0]
+    plan(g, SolveSpec(mode="flat", tuning="db"))
+    assert plan_cache_info()[0] == n_after_off + 1
+    # same mode+tuning re-plan hits the cache (no new entry)
+    plan(g, SolveSpec(mode="flat", tuning="off"))
+    plan(g, SolveSpec(mode="flat", tuning="db"))
+    assert plan_cache_info()[0] == n_after_off + 1
+    clear_plan_cache()
+
+
+def test_db_entry_changes_resolved_engine_config():
+    """A stored winner actually lands in the resolved plan: force a
+    shortcut the heuristics would not pick and observe it."""
+    g = rmat_graph(6, 4, seed=8)
+    heur = SolveSpec(mode="flat", tuning="off").resolve(g)
+    forced = "complete" if heur.spec.shortcut != "complete" else "csp"
+    db = TuningDB()
+    db.put(key_for("flat", g), {"shortcut": forced})
+    set_tuning_db(db)
+    rs = SolveSpec(mode="flat", tuning="db").resolve(g)
+    assert rs.spec.shortcut == forced
+    # and the solve still returns the reference forest
+    clear_plan_cache()
+    r_db = plan(g, SolveSpec(mode="flat", tuning="db")).solve()
+    r_off = plan(g, SolveSpec(mode="flat", tuning="off")).solve()
+    assert _eids(r_db) == _eids(r_off)
+    clear_plan_cache()
+
+
+# ---------------------------------------------------------------------------
+# the CLI validator
+# ---------------------------------------------------------------------------
+
+def test_check_tuning_db_cli(tmp_path):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+    try:
+        import check_tuning_db
+    finally:
+        sys.path.pop(0)
+    db = TuningDB()
+    db.put(_key(), {"pack": True, "shortcut": "csp"})
+    good = db.save(str(tmp_path / "good.json"))
+    assert check_tuning_db.check(good) == []
+
+    doc = json.load(open(good))
+    doc["schema"] = "tuning-db/v0"
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps(doc))
+    problems = check_tuning_db.check(str(stale))
+    assert problems and "tuning-db/v0" in problems[0]
+
+    doc = json.load(open(good))
+    doc["entries"][0]["knobs"]["shortcut"] = "warp-drive"
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(doc))
+    problems = check_tuning_db.check(str(bad))
+    assert problems and "SolveSpec" in problems[0]

@@ -1,0 +1,152 @@
+"""CI gate: validate a ``tuning-db/v1`` database file.
+
+Usage: python tools/check_tuning_db.py tuning-db/v1.json
+
+Checks, in order (DESIGN.md §12):
+
+1. **schema** — the file parses and declares ``schema: "tuning-db/v1"``
+   (a stale or future schema is rejected loudly; the resolve path would
+   silently fall back to heuristics, CI must not);
+2. **env-fingerprint sanity** — the build environment block carries a
+   non-empty backend string and a positive integer device count (the
+   comparability half of every lookup key);
+3. **key integrity** — every entry key has the full
+   (shape_class, weights, mode, backend, device_count, mesh) tuple,
+   the shape class parses as an ``n<i>d<j>`` bucket, the weights class
+   is one of int/float/na, and backend/device_count agree with the
+   database's own env fingerprint (entries measured elsewhere can never
+   match a lookup made here);
+4. **knob referential integrity against the current SolveSpec** — the
+   stored knob names are a subset of the tunable set and the values
+   actually construct a valid ``SolveSpec`` for the entry's mode (the
+   strongest possible check: ``__post_init__`` re-runs every
+   consolidated validation rule, so a field renamed or an enum retired
+   since the DB was built fails here instead of at resolve time).
+
+Exit codes: 0 valid, 1 invalid (one reason per line on stderr),
+2 usage error.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+WEIGHT_CLASSES = ("int", "float", "na")
+
+
+def check(path: str) -> list[str]:
+    """All validation failures of the database at ``path`` ([] = valid)."""
+    import dataclasses
+
+    from repro.coarsen.config import CoarsenConfig
+    from repro.solve.spec import SolveSpec
+    from repro.solve.tune import (
+        SCHEMA,
+        TUNABLE_KNOBS,
+        _COARSEN_KNOBS,
+        parse_shape_class,
+    )
+
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: cannot parse: {e}"]
+    problems: list[str] = []
+    schema = doc.get("schema") if isinstance(doc, dict) else None
+    if schema != SCHEMA:
+        return [f"{path}: unsupported schema {schema!r} (expected {SCHEMA!r})"]
+
+    env = doc.get("env")
+    if not isinstance(env, dict):
+        problems.append(f"{path}: missing env fingerprint")
+        env = {}
+    backend = env.get("backend")
+    if not isinstance(backend, str) or not backend:
+        problems.append(f"{path}: env.backend is not a non-empty string")
+    devices = env.get("device_count")
+    if not isinstance(devices, int) or devices < 1:
+        problems.append(f"{path}: env.device_count is not a positive int")
+
+    entries = doc.get("entries")
+    if not isinstance(entries, list):
+        return problems + [f"{path}: entries is not a list"]
+    allowed = set(TUNABLE_KNOBS) | {"coarsen"}
+    for i, item in enumerate(entries):
+        where = f"{path}: entry #{i}"
+        key = item.get("key") if isinstance(item, dict) else None
+        knobs = item.get("knobs") if isinstance(item, dict) else None
+        if not isinstance(key, dict) or not isinstance(knobs, dict):
+            problems.append(f"{where}: missing key/knobs objects")
+            continue
+        missing = [f for f in ("shape_class", "weights", "mode", "backend",
+                               "device_count", "mesh") if f not in key]
+        if missing:
+            problems.append(f"{where}: key missing fields {missing}")
+            continue
+        if parse_shape_class(str(key["shape_class"])) is None:
+            problems.append(
+                f"{where}: unparseable shape_class {key['shape_class']!r}")
+        if key["weights"] not in WEIGHT_CLASSES:
+            problems.append(
+                f"{where}: unknown weights class {key['weights']!r}")
+        if isinstance(backend, str) and key["backend"] != backend:
+            problems.append(
+                f"{where}: key backend {key['backend']!r} != env backend "
+                f"{backend!r} (mixed-environment database)")
+        if isinstance(devices, int) and key["device_count"] != devices:
+            problems.append(
+                f"{where}: key device_count {key['device_count']!r} != "
+                f"env device_count {devices}")
+        unknown = set(knobs) - allowed
+        if unknown:
+            problems.append(
+                f"{where}: unknown knob(s) {sorted(unknown)} "
+                f"(tunable: {sorted(allowed)})")
+            continue
+        co = knobs.get("coarsen")
+        if co is not None and (not isinstance(co, dict)
+                               or set(co) - set(_COARSEN_KNOBS)):
+            problems.append(f"{where}: bad coarsen block {co!r}")
+            continue
+        # Referential integrity: the knobs must construct a valid spec
+        # for this mode under the *current* SolveSpec validation rules.
+        try:
+            kw = {k: v for k, v in knobs.items()
+                  if k != "coarsen" and v is not None}
+            if kw.get("dedupe") is None:
+                kw.pop("dedupe", None)
+            if co:
+                kw["coarsen"] = CoarsenConfig(**co)
+            spec = SolveSpec(mode=str(key["mode"]), **kw)
+            dataclasses.replace(spec)  # re-runs __post_init__
+        except (TypeError, ValueError) as e:
+            problems.append(
+                f"{where}: knobs do not validate against the current "
+                f"SolveSpec ({e})")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 1:
+        print("usage: check_tuning_db.py tuning-db/v1.json", file=sys.stderr)
+        return 2
+    problems = check(argv[0])
+    if problems:
+        for p in problems:
+            print(p, file=sys.stderr)
+        return 1
+    with open(argv[0]) as f:
+        n = len(json.load(f)["entries"])
+    print(f"{argv[0]}: OK ({n} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -1,0 +1,157 @@
+"""Autotune CLI: refresh / verify the ``tuning-db/v1`` database.
+
+Build (the CI ``autotune`` job's refresh step, DESIGN.md §12)::
+
+    python tools/tune.py --smoke --out tuning-db/v1.json \
+        [--classes rmat,grid,components] [--modes flat,coarsen] \
+        [--iters 3] [--warmup 1] [--seed 0] [--merge tuning-db/v1.json]
+
+Runs the candidate sweep (enumerate → cost-prune → measure) over the CI
+graph classes for each requested mode and writes the winners as one
+``tuning-db/v1`` document. ``--smoke`` shrinks the graphs and the
+candidate space to the CI-sized sweep; ``--merge PATH`` seeds the
+database from an existing file first (the rolling-cache refresh: keys
+re-tuned this run are overwritten, others survive).
+
+Verify (the parity gate)::
+
+    python tools/tune.py --verify tuning-db/v1.json [--smoke]
+
+Loads the database, then solves every graph class with
+``tuning="db"`` and ``tuning="off"`` asserting identical forest weight
+and MSF edge set — the proof that consulting the database never changes
+an answer, only its latency.
+
+Exit codes: 0 ok, 1 parity/tuning failure, 2 usage error.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+SMOKE_SCALE = 8
+FULL_SCALE = 12
+DEFAULT_CLASSES = "rmat,grid,components"
+DEFAULT_MODES = "flat,coarsen"
+
+
+def _flag(argv, flag, default=None):
+    from benchmarks.common import flag_value
+
+    v = flag_value(argv, flag)
+    return v if v is not None else default
+
+
+def graph_classes(names: list[str], smoke: bool):
+    """The CI graph classes (the bench smoke inputs) by name."""
+    from repro.graphs.generators import (
+        components_graph,
+        grid_road_graph,
+        rmat_graph,
+    )
+
+    scale = SMOKE_SCALE if smoke else FULL_SCALE
+    side = 32 if smoke else 128
+    out = []
+    for name in names:
+        if name == "rmat":
+            out.append((f"rmat_s{scale}",
+                        rmat_graph(scale, 4 if smoke else 8, seed=9)))
+        elif name == "grid":
+            out.append((f"grid_{side}x{side}",
+                        grid_road_graph(side, side, seed=2)))
+        elif name == "components":
+            k, sz = (8, 32) if smoke else (32, 128)
+            out.append((f"components_{k}x{sz}",
+                        components_graph(k, sz, seed=5)))
+        else:
+            raise SystemExit(f"unknown graph class {name!r} "
+                             f"(expected from: {DEFAULT_CLASSES})")
+    return out
+
+
+def build(argv: list[str]) -> int:
+    from repro.solve.tune import TuningDB, tune
+
+    out = _flag(argv, "--out")
+    if out is None:
+        print(__doc__, file=sys.stderr)
+        return 2
+    smoke = "--smoke" in argv
+    iters = int(_flag(argv, "--iters", "3"))
+    warmup = int(_flag(argv, "--warmup", "1"))
+    seed = int(_flag(argv, "--seed", "0"))
+    modes = [m for m in _flag(argv, "--modes", DEFAULT_MODES).split(",") if m]
+    classes = [c for c in
+               _flag(argv, "--classes", DEFAULT_CLASSES).split(",") if c]
+    merge = _flag(argv, "--merge")
+
+    db = TuningDB.load(merge) if merge and os.path.exists(merge) else TuningDB()
+    space = "smoke" if smoke else "full"
+    for gname, g in graph_classes(classes, smoke):
+        for mode in modes:
+            res = tune(g, mode, db=db, space=space,
+                       iters=iters, warmup=warmup, seed=seed)
+            best = res.ranking[0]
+            print(
+                f"{gname:>22} {mode:>8}: key={res.key.shape_class}/"
+                f"{res.key.weights} winner median={best.median_us:.1f}us "
+                f"iqr={best.iqr_us:.1f}us "
+                f"(measured {len(res.ranking)}, pruned {res.pruned})"
+            )
+    path = db.save(out)
+    print(f"# tuning DB: {len(db)} entries -> {path}")
+    return 0
+
+
+def verify(argv: list[str]) -> int:
+    import numpy as np
+
+    from repro.solve import SolveSpec, plan, set_tuning_db
+    from repro.solve.tune import TuningDB
+
+    path = _flag(argv, "--verify")
+    db = TuningDB.load(path)  # loud on schema/shape problems
+    set_tuning_db(db)
+    smoke = "--smoke" in argv
+    modes = [m for m in _flag(argv, "--modes", DEFAULT_MODES).split(",") if m]
+    classes = [c for c in
+               _flag(argv, "--classes", DEFAULT_CLASSES).split(",") if c]
+    failures = 0
+    for gname, g in graph_classes(classes, smoke):
+        for mode in modes:
+            r_off = plan(g, SolveSpec(mode=mode, tuning="off")).solve()
+            r_db = plan(g, SolveSpec(mode=mode, tuning="db")).solve()
+            w_ok = abs(float(r_off.weight) - float(r_db.weight)) <= max(
+                1.0, 1e-6 * abs(float(r_off.weight)))
+            eids = lambda r: set(
+                np.asarray(r.msf_eids)[: int(r.n_msf_edges)].tolist())
+            e_ok = eids(r_off) == eids(r_db)
+            status = "ok" if (w_ok and e_ok) else "PARITY FAILURE"
+            print(f"{gname:>22} {mode:>8}: tuning=db vs off {status} "
+                  f"(weight {r_db.weight:.1f} vs {r_off.weight:.1f})")
+            if not (w_ok and e_ok):
+                failures += 1
+    if failures:
+        print(f"# {failures} parity failure(s)", file=sys.stderr)
+        return 1
+    print(f"# tuning=db parity OK against {path} ({len(db)} entries)")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    if "--verify" in argv:
+        return verify(argv)
+    if "--out" in argv:
+        return build(argv)
+    print(__doc__, file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
