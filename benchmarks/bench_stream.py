@@ -13,7 +13,11 @@ Rows:
 
 ``--smoke`` streams a tiny graph and *asserts* the engine's forest weight
 matches a full recompute (for both the flat and the coarsen-recompute
-union paths) — the CI tripwire for the sparsification/union machinery.
+union paths) — the CI tripwire for the sparsification/union machinery —
+then runs a **delete-heavy phase**: a third of the inserted pairs are
+deleted through the replacement-edge reservoir and the post-replacement
+snapshot must be non-stale (``n_unhealed == 0``) and weight-identical to
+a flat recompute over the surviving multiset (DESIGN.md §6.4).
 ``--json PATH`` writes the rows as a BENCH trajectory point.
 """
 from __future__ import annotations
@@ -85,7 +89,63 @@ def run_smoke_rows():
                 derived=f"batches={n_batches};weight={rep.weight:.0f}",
             )
         )
+    out.append(_smoke_delete_row(n, lo, hi, w, n_batches))
     return out
+
+
+def _smoke_delete_row(n, lo, hi, w, n_batches):
+    """Delete-heavy phase: exact replacement-edge deletions vs recompute.
+
+    Streams the same batches into a fresh plan with a lossless reservoir,
+    deletes a third of the inserted pairs, and asserts the published
+    snapshot is NOT stale and matches a flat recompute over the surviving
+    multiset — the CI tripwire for the §6.4 deletion protocol.
+    """
+    p = plan(
+        n,
+        SolveSpec(
+            mode="stream", batch_capacity=SMOKE_BATCH,
+            reservoir_capacity=1 << 16, reservoir_per_component=1 << 16,
+        ),
+    )
+    m_seen = n_batches * SMOKE_BATCH
+    for k in range(n_batches):
+        sl = slice(k * SMOKE_BATCH, (k + 1) * SMOKE_BATCH)
+        p.update(lo[sl], hi[sl], w[sl])
+    # canonical unique pairs of everything inserted; delete every 3rd
+    plo = np.minimum(lo[:m_seen], hi[:m_seen]).astype(np.int64)
+    phi = np.maximum(lo[:m_seen], hi[:m_seen]).astype(np.int64)
+    keys = np.unique(plo * n + phi)
+    dkeys = keys[::3]
+    dlo, dhi = dkeys // n, dkeys % n
+    t0 = time.perf_counter()
+    rep = None
+    n_del = 0
+    for k in range(0, len(dlo), SMOKE_BATCH):
+        sl = slice(k, k + SMOKE_BATCH)
+        rep = p.delete(dlo[sl], dhi[sl])
+        assert rep.n_unhealed == 0 and not rep.stale, (
+            "smoke delete phase lost replacements: reservoir exhausted"
+        )
+        n_del += rep.raw.n_deleted
+    dt = time.perf_counter() - t0
+    # parity: flat recompute over the surviving edge multiset
+    survive = ~np.isin(plo * n + phi, dkeys)
+    g_sur = from_edges(
+        lo[:m_seen][survive], hi[:m_seen][survive],
+        w[:m_seen][survive].astype(np.float64), n,
+    )
+    want = plan(g_sur, SolveSpec()).solve().weight
+    assert abs(rep.weight - want) <= max(1.0, 1e-6 * want), (
+        "delete", rep.weight, want,
+    )
+    n_rounds = (len(dlo) + SMOKE_BATCH - 1) // SMOKE_BATCH
+    return from_samples(
+        f"stream_smoke_delete_s{SMOKE_SCALE}_b{SMOKE_BATCH}",
+        [dt], per=n_rounds,
+        derived=f"deleted_pairs={len(dlo)};forest_deletes={n_del};"
+        f"weight={rep.weight:.0f}",
+    )
 
 
 def run_rows():

@@ -15,8 +15,11 @@ Three actors:
 - **producer** (thread): walks the precomputed Poisson arrival schedule
   and pushes ``(deadline, u, v)`` into a *bounded* admission queue;
   ``queue.Full`` is a drop (counted, never blocks — open loop);
-- **writer** (thread): inserts edge batches via ``plan.update`` every
-  ``--writer-interval-ms``, wrapping around the edge stream;
+- **writer** (thread): mutates the graph every ``--writer-interval-ms``
+  — inserts edge batches via ``plan.update`` (wrapping around the edge
+  stream) and, on a ``--delete-frac`` fraction of rounds, deletes a
+  slice of previously-inserted edges via ``plan.delete`` (exact
+  replacement-edge deletions, so snapshots stay true MSFs under churn);
 - **consumer** (main thread): pulls admitted queries into the
   MicroBatcher and flushes either at the micro-batch size or when the
   queue momentarily empties; per-query end-to-end latency (scheduled
@@ -68,6 +71,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "as timeouts (still answered)")
     ap.add_argument("--writer-batch", type=int, default=512)
     ap.add_argument("--writer-interval-ms", type=float, default=20.0)
+    ap.add_argument("--delete-frac", type=float, default=0.2,
+                    help="fraction of writer rounds that delete a slice "
+                         "of previously-inserted edges (exact "
+                         "replacement-edge deletions, DESIGN.md §6.4); "
+                         "0 disables the delete mix")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", metavar="PATH", default=None,
                     help="write the slo-report/v1 JSON here")
@@ -151,7 +159,14 @@ def run(args) -> dict:
     admission: queue.Queue = queue.Queue(maxsize=args.queue_cap)
     producer_done = threading.Event()
     stop_writer = threading.Event()
-    writer_stats = {"updates": 0, "edges": 0}
+    writer_stats = {
+        "updates": 0,
+        "edges": 0,
+        "deletes": 0,
+        "edges_deleted": 0,
+        "replacements": 0,
+        "unhealed": 0,
+    }
 
     offs = _arrival_schedule(rng, args.qps, args.duration)
     qu = rng.integers(0, n, size=len(offs))
@@ -172,14 +187,29 @@ def run(args) -> dict:
     def writer() -> None:
         pos = warm
         interval = args.writer_interval_ms / 1e3
+        wrng = np.random.default_rng(args.seed + 1)
         while not stop_writer.is_set():
-            if pos >= len(lo):
-                pos = warm  # wrap; duplicate inserts are MSF no-ops
-            end = min(pos + args.writer_batch, len(lo))
-            stream.update(lo[pos:end], hi[pos:end], w[pos:end])
-            writer_stats["updates"] += 1
-            writer_stats["edges"] += end - pos
-            pos = end
+            if args.delete_frac > 0 and wrng.random() < args.delete_frac:
+                # Delete-churn round: tombstone-and-heal a random slice
+                # of the edges inserted so far (exact replacement-edge
+                # deletions; re-inserting them later is an MSF no-op, so
+                # the wrap-around keeps the graph statistically stable).
+                at = int(wrng.integers(0, max(1, pos - args.writer_batch)))
+                end = min(at + max(1, args.writer_batch // 4), pos)
+                rep = stream.delete(lo[at:end], hi[at:end])
+                writer_stats["deletes"] += 1
+                writer_stats["edges_deleted"] += end - at
+                if rep.raw is not None:
+                    writer_stats["replacements"] += rep.raw.n_replacements
+                writer_stats["unhealed"] = rep.n_unhealed
+            else:
+                if pos >= len(lo):
+                    pos = warm  # wrap; duplicate inserts are MSF no-ops
+                end = min(pos + args.writer_batch, len(lo))
+                stream.update(lo[pos:end], hi[pos:end], w[pos:end])
+                writer_stats["updates"] += 1
+                writer_stats["edges"] += end - pos
+                pos = end
             stop_writer.wait(interval)
 
     answered = 0
@@ -280,6 +310,10 @@ def run(args) -> dict:
         "writer": {
             "updates": writer_stats["updates"],
             "edges_inserted": writer_stats["edges"],
+            "deletes": writer_stats["deletes"],
+            "edges_deleted": writer_stats["edges_deleted"],
+            "replacements": writer_stats["replacements"],
+            "unhealed": writer_stats["unhealed"],
             "snapshot_version": service.snapshot_version(),
         },
         "batcher": batcher_metrics,
@@ -312,7 +346,11 @@ def main(argv: list[str] | None = None) -> int:
     )
     print(
         f"writer: {report['writer']['updates']} updates, "
-        f"{report['writer']['edges_inserted']} edges, snapshot "
+        f"{report['writer']['edges_inserted']} edges, "
+        f"{report['writer']['deletes']} delete rounds "
+        f"({report['writer']['edges_deleted']} edges, "
+        f"{report['writer']['replacements']} replacements, "
+        f"{report['writer']['unhealed']} unhealed), snapshot "
         f"v{report['writer']['snapshot_version']}; "
         f"batcher: {report['batcher']}"
     )

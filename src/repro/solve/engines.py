@@ -150,6 +150,9 @@ class _StreamPlanEngine:
             segmin=s.segmin or "auto",
             coarsen=rs.coarsen,
             coarsen_threshold=s.coarsen_threshold,
+            reservoir_capacity=s.reservoir_capacity,
+            reservoir_per_component=s.reservoir_per_component,
+            exact_deletes=s.exact_deletes,
             variant=s.variant,
             shortcut=rs.shortcut,
             capacity=s.capacity,
@@ -175,6 +178,8 @@ class _StreamPlanEngine:
             host_roundtrips=0,
             recompiles=int(eng.recompiles),
             raw=self._last,
+            stale=bool(snap.stale),
+            n_unhealed=int(eng.unhealed),
         )
 
     # -- engine protocol ------------------------------------------------
@@ -194,6 +199,11 @@ class _StreamPlanEngine:
 
     def compact(self) -> SolveReport:
         stats = self.engine.compact()
+        self._last = stats
+        return self._report(iterations=stats.iterations)
+
+    def recertify(self, u, v, w) -> SolveReport:
+        stats = self.engine.recertify(u, v, w)
         self._last = stats
         return self._report(iterations=stats.iterations)
 

@@ -273,9 +273,22 @@ class Plan:
         return self._observed("update", lambda: eng.update(u, v, w))
 
     def delete(self, u, v) -> SolveReport:
-        """Stream mode: tombstone a batch of edges."""
+        """Stream mode: delete a batch of edges (exact replacement-edge
+        search by default; tombstones under ``exact_deletes=False``)."""
         eng = self._stream()
         return self._observed("delete", lambda: eng.delete(u, v))
+
+    def recertify(self, u, v, w) -> SolveReport:
+        """Stream mode: rebuild forest + reservoir exactly from a
+        caller-supplied surviving edge multiset — the recovery path when
+        ``SolveReport.n_unhealed > 0`` after reservoir exhaustion."""
+        eng = self._stream()
+        if not hasattr(eng, "recertify"):
+            raise ValueError(
+                f"recertify() is a stream-mode surface; this plan's "
+                f"mode is {self.mode!r}"
+            )
+        return self._observed("recertify", lambda: eng.recertify(u, v, w))
 
     def query(self, u, v):
         """Stream mode: batched connectivity queries against the latest

@@ -34,6 +34,8 @@ class SolveReport(NamedTuple):
     raw: Any  # engine-native result (MSFResult / UpdateStats / ...)
     timings: Dict[str, float] = {}  # span name -> seconds; {} when obs off
     cost: Any = None  # PlanCost of the plan's executable; None off-scope
+    stale: bool = False  # stream mode: snapshot may diverge from true MSF
+    n_unhealed: int = 0  # stream mode: deletions not certifiably healed
 
     @property
     def n_components(self) -> int:

@@ -187,6 +187,9 @@ class SolveSpec:
     min_capacity: int = 16
     compact_trigger: float = 0.25
     coarsen_threshold: int = 1 << 15
+    reservoir_capacity: int = 4096
+    reservoir_per_component: int = 256
+    exact_deletes: bool = True
     # dist mode
     row_axis: str = "data"
     col_axis: str = "model"
@@ -273,6 +276,10 @@ class SolveSpec:
                 raise ValueError("min_capacity must be >= 1")
             if self.coarsen_threshold < 0:
                 raise ValueError("coarsen_threshold must be >= 0")
+            if self.reservoir_capacity < 0:
+                raise ValueError("reservoir_capacity must be >= 0")
+            if self.reservoir_per_component < 1:
+                raise ValueError("reservoir_per_component must be >= 1")
         if self.capacity < 1:
             raise ValueError("capacity must be >= 1")
 

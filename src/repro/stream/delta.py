@@ -18,6 +18,12 @@ Responsibilities:
 - **Stable global edge ids**: a NEW edge is assigned the next gid and keeps
   it for as long as it lives in the forest, so MSF edge ids remain
   meaningful across versions; a DECREASE keeps the live edge's gid.
+- **Replacement-edge reservoir** (:class:`Reservoir`, DESIGN.md §6.4): the
+  bounded per-component store of non-tree edges that lost an MSF race.
+  Entries keep their stable gid, are capped cheapest-first per component
+  (then globally), and carry their own sorted key index so the engine can
+  probe membership on delete/re-insert with the same searchsorted pattern
+  as the live forest index.
 """
 from __future__ import annotations
 
@@ -53,10 +59,15 @@ class PreparedBatch(NamedTuple):
 
 
 def prepare_batch(u, v, w, n: int) -> PreparedBatch:
-    """Canonicalize one incoming batch. Exact host-side pass."""
-    u = np.asarray(u, np.int64)
-    v = np.asarray(v, np.int64)
-    w = np.asarray(w, np.float64)
+    """Canonicalize one incoming batch. Exact host-side pass.
+
+    Scalars / 0-d arrays are promoted to one-element batches
+    (``np.atleast_1d``), so ``prepare_batch(3, 5, 1.0, n)`` is the
+    single-edge batch rather than a ``TypeError`` on ``len``.
+    """
+    u = np.atleast_1d(np.asarray(u, np.int64))
+    v = np.atleast_1d(np.asarray(v, np.int64))
+    w = np.atleast_1d(np.asarray(w, np.float64))
     if not (u.shape == v.shape == w.shape):
         raise ValueError("u, v, w must have identical shapes")
     if u.size and (u.min() < 0 or v.min() < 0 or max(u.max(), v.max()) >= n):
@@ -178,3 +189,186 @@ def build_live_index(lo, hi, w, n: int, capacity: int):
         buf = np.full(capacity, np.iinfo(np.int64).max, np.int64)
         buf[: len(keys_sorted)] = keys_sorted
     return buf, np.asarray(w, np.float32)[order], order.astype(np.int32)
+
+
+class Reservoir:
+    """Bounded per-component store of non-tree edges (DESIGN.md §6.4).
+
+    Edges that lose an MSF race in the engine's union solve land here
+    instead of being discarded, so a later forest-edge deletion can pull
+    them back as replacement candidates. Entries carry their stable gid
+    and the canonical component root of their endpoints (non-tree edges
+    are always intra-component).
+
+    Capacity policy: ``per_component`` entries per component, then
+    ``capacity`` entries total, both retained **cheapest-first** under
+    the strict ``(w, gid)`` order the MSF itself uses. Any entry evicted
+    by either cap makes its component *lossy* — the engine tracks that
+    and refuses to certify deletions inside lossy components
+    (``DeleteStats.n_unhealed``).
+
+    A sorted int64 ``edge_keys`` index over the stored pairs backs O(log
+    count) membership probes (:meth:`lookup`) — the reservoir twin of
+    :func:`build_live_index`.
+    """
+
+    def __init__(self, n: int, capacity: int, per_component: int):
+        if capacity < 0:
+            raise ValueError("reservoir capacity must be >= 0")
+        if per_component < 1:
+            raise ValueError("reservoir per-component cap must be >= 1")
+        self.n = int(n)
+        self.capacity = int(capacity)
+        self.per_component = int(per_component)
+        self._lo = np.zeros(capacity, np.int32)
+        self._hi = np.zeros(capacity, np.int32)
+        self._w = np.zeros(capacity, np.float32)
+        self._gid = np.full(capacity, -1, np.int32)
+        self._comp = np.zeros(capacity, np.int32)
+        self._count = 0
+        self._keys_sorted = np.zeros(0, np.int64)
+        self._rows_sorted = np.zeros(0, np.int64)
+
+    def __len__(self) -> int:
+        return self._count
+
+    def edges(self):
+        """Copies of the stored rows: (lo, hi, w, gid, comp)."""
+        c = self._count
+        return (
+            self._lo[:c].copy(),
+            self._hi[:c].copy(),
+            self._w[:c].copy(),
+            self._gid[:c].copy(),
+            self._comp[:c].copy(),
+        )
+
+    # ------------------------------------------------------------------
+
+    def _reindex(self) -> None:
+        c = self._count
+        keys = edge_keys(self._lo[:c], self._hi[:c], self.n)
+        order = np.argsort(keys, kind="stable")
+        self._keys_sorted = keys[order]
+        self._rows_sorted = order.astype(np.int64)
+
+    def _set(self, lo, hi, w, gid, comp) -> None:
+        c = len(lo)
+        self._lo[:c] = lo
+        self._hi[:c] = hi
+        self._w[:c] = w
+        self._gid[:c] = gid
+        self._comp[:c] = comp
+        self._count = c
+        self._reindex()
+
+    # ------------------------------------------------------------------
+
+    def lookup(self, lo, hi) -> np.ndarray:
+        """Row index of each canonical (lo, hi) query pair, −1 on miss."""
+        lo = np.asarray(lo)
+        hi = np.asarray(hi)
+        out = np.full(len(lo), -1, np.int64)
+        if self._count == 0 or len(lo) == 0:
+            return out
+        keys = edge_keys(lo, hi, self.n)
+        j = np.searchsorted(self._keys_sorted, keys)
+        j = np.clip(j, 0, len(self._keys_sorted) - 1)
+        found = self._keys_sorted[j] == keys
+        out[found] = self._rows_sorted[j[found]]
+        return out
+
+    def remove_rows(self, rows):
+        """Remove ``rows`` and return their (lo, hi, w, gid) in row order."""
+        rows = np.asarray(rows, np.int64)
+        out = (
+            self._lo[rows].copy(),
+            self._hi[rows].copy(),
+            self._w[rows].copy(),
+            self._gid[rows].copy(),
+        )
+        if len(rows):
+            keep = np.ones(self._count, bool)
+            keep[rows] = False
+            idx = np.flatnonzero(keep)
+            self._set(
+                self._lo[idx], self._hi[idx], self._w[idx],
+                self._gid[idx], self._comp[idx],
+            )
+        return out
+
+    def take_components(self, comps):
+        """Remove and return every entry bucketed under one of ``comps``
+        (canonical component roots) — the replacement-candidate pull of a
+        forest-edge deletion."""
+        comps = np.asarray(comps)
+        if self._count == 0 or len(comps) == 0:
+            z = np.zeros(0, np.int32)
+            return z, z, np.zeros(0, np.float32), z
+        rows = np.flatnonzero(np.isin(self._comp[: self._count], comps))
+        return self.remove_rows(rows)
+
+    def rebucket(self, canon: np.ndarray) -> None:
+        """Re-label every entry's component from canonical labels
+        (entries are intra-component: ``canon[lo]`` is the bucket)."""
+        c = self._count
+        if c:
+            self._comp[:c] = np.asarray(canon, np.int32)[self._lo[:c]]
+
+    def clear(self) -> None:
+        self._count = 0
+        self._reindex()
+
+    def absorb(self, lo, hi, w, gid, comp):
+        """Merge a batch of race losers into the store, enforcing both
+        caps cheapest-first. Returns ``(evicted_comps, n_evicted)`` —
+        the unique component roots that lost at least one entry (the
+        engine marks them lossy) and the total eviction count."""
+        lo = np.asarray(lo, np.int32)
+        hi = np.asarray(hi, np.int32)
+        w = np.asarray(w, np.float32)
+        gid = np.asarray(gid, np.int32)
+        comp = np.asarray(comp, np.int32)
+        if len(lo) == 0:
+            return np.zeros(0, np.int32), 0
+        if self.capacity == 0:
+            return np.unique(comp), len(lo)
+        c = self._count
+        lo = np.concatenate([self._lo[:c], lo])
+        hi = np.concatenate([self._hi[:c], hi])
+        w = np.concatenate([self._w[:c], w])
+        gid = np.concatenate([self._gid[:c], gid])
+        comp = np.concatenate([self._comp[:c], comp])
+        # Defensive key dedupe (losers are disjoint from the store by
+        # construction): keep the (w, gid)-min copy of a pair.
+        keys = edge_keys(lo, hi, self.n)
+        order = np.lexsort((gid, w, keys))
+        keys = keys[order]
+        first = np.ones(len(keys), bool)
+        first[1:] = keys[1:] != keys[:-1]
+        idx = order[first]
+        lo, hi, w, gid, comp = lo[idx], hi[idx], w[idx], gid[idx], comp[idx]
+        m = len(lo)
+        # Per-component cap: rank entries cheapest-first inside each
+        # component, drop ranks past the cap.
+        order = np.lexsort((gid, w, comp))
+        comp_sorted = comp[order]
+        pos = np.arange(m, dtype=np.int64)
+        starts = np.ones(m, bool)
+        starts[1:] = comp_sorted[1:] != comp_sorted[:-1]
+        group_start = np.maximum.accumulate(np.where(starts, pos, 0))
+        within = (pos - group_start) < self.per_component
+        keep = np.zeros(m, bool)
+        keep[order[within]] = True
+        # Global cap: among survivors keep the (w, gid)-cheapest overall.
+        n_keep = int(keep.sum())
+        if n_keep > self.capacity:
+            surv = np.flatnonzero(keep)
+            cheap = surv[np.lexsort((gid[surv], w[surv]))[: self.capacity]]
+            keep = np.zeros(m, bool)
+            keep[cheap] = True
+        n_evicted = m - int(keep.sum())
+        evicted_comps = np.unique(comp[~keep])
+        idx = np.flatnonzero(keep)
+        self._set(lo[idx], hi[idx], w[idx], gid[idx], comp[idx])
+        return evicted_comps.astype(np.int32), n_evicted

@@ -8,10 +8,9 @@ Insertions are *exact* via the sparsification identity
 
     MSF(G ∪ B) = MSF(MSF(G) ∪ B)
 
-(Sanders & Schimek 2023, §2; Kopelowitz et al. 2018): the engine never
-stores more than the current forest (≤ n − 1 undirected edges), so an
-insert batch of size |B| runs the already-jitted ``repro.core.msf`` kernel
-over a *fixed-capacity* union buffer of exactly
+(Sanders & Schimek 2023, §2; Kopelowitz et al. 2018): an insert batch of
+size |B| runs the already-jitted ``repro.core.msf`` kernel over a
+*fixed-capacity* union buffer of exactly
 
     forest_capacity + batch_capacity  =  (n − 1) + B_cap
 
@@ -25,16 +24,23 @@ single-reduction path whenever weights stay in the paper's integral
 flat kernel (``segmin="pallas"``; ``interpret=True`` is selected
 automatically off ``jax.default_backend()``).
 
-Deletions are **tombstoned**: the edge is marked dead, excluded from the
-live index, and the published snapshot is re-issued with ``stale=True``.
-The structural effect (component splits) becomes visible at the next
-*compaction* — triggered automatically when the tombstoned fraction
-exceeds ``compact_trigger`` or by calling :meth:`compact` — or implicitly
-at the next insert batch (dead rows never enter the union buffer, and the
-store is rewritten from the MSF result). Because non-forest edges were
-discarded by sparsification, a deleted forest edge is *not* replaced by a
-previously-seen non-forest edge; this is the standard trade-off of
-forest-only streaming (documented in DESIGN.md §6.4).
+Deletions are **exact** too (DESIGN.md §6.4): edges that lose an MSF race
+are no longer discarded by sparsification — they are retained in a bounded
+per-component **replacement-edge reservoir**
+(:class:`repro.stream.delta.Reservoir`, Kopelowitz, Porat & Rosenmutter
+2018's non-tree candidate framing). Deleting a forest edge triggers
+replacement-edge search: the reservoir entries bucketed under the split
+component re-enter the union solve, so the republished snapshot is the
+true MSF of the surviving edge multiset. A snapshot stays ``stale=True``
+only while deletions remain *unhealed* — a deleted forest edge lived in a
+component whose reservoir had evicted entries past its caps
+(``DeleteStats.n_unhealed``, ``stream.reservoir.{hits,evictions,
+exhausted}`` obs counters); :meth:`StreamEngine.recertify` rebuilds
+forest + reservoir exactly from a caller-supplied edge source
+(coarsen-assisted past ``coarsen_threshold``) and clears the condition.
+``exact_deletes=False`` restores the legacy forest-only tombstone
+semantics (deferred splits, conservative forests) for callers that want
+the old trade-off.
 """
 from __future__ import annotations
 
@@ -46,7 +52,7 @@ import numpy as np
 from repro import obs
 from repro.core.msf import flat_msf
 from repro.core.semiring import PACK_IDX_MASK
-from repro.graphs.structures import Graph
+from repro.graphs.structures import Graph, edge_keys
 from repro.solve.spec import weights_packable
 from repro.stream import delta
 from repro.stream.service import next_pow2
@@ -69,25 +75,42 @@ def _spanned(name):
     return deco
 
 
+def _canonical_labels(parent) -> np.ndarray:
+    """Pointer-jump a parent vector to its root fixpoint (host-side)."""
+    p = np.asarray(parent, np.int32)
+    while True:
+        gp = p[p]
+        if np.array_equal(gp, p):
+            return p
+        p = gp
+
+
 class UpdateStats(NamedTuple):
     version: int
     weight: float
     n_components: int
     n_forest_edges: int
-    n_new: int  # batch edges absent from the live set
+    n_new: int  # batch edges absent from the live forest
     n_decrease: int  # batch edges that lowered a live weight
     n_drop: int  # batch duplicates that changed nothing
     iterations: int  # MSF hook/shortcut iterations for this update
     union_directed_edges: int  # traced edge-buffer size of the update
     batch_capacity: int = 0  # padded batch slots used for this update
     recompiles: int = 0  # cumulative distinct union-buffer shapes compiled
+    n_revived: int = 0  # n_new edges matched in the reservoir (gid kept)
+    reservoir_size: int = 0  # non-tree edges retained after this update
 
 
 class DeleteStats(NamedTuple):
     version: int
-    n_deleted: int
-    n_missing: int  # requested deletions not present in the forest
-    compacted: bool
+    n_deleted: int  # forest edges removed
+    n_missing: int  # requested pairs never present (forest or reservoir)
+    compacted: bool  # a union solve ran (replacement search / trigger)
+    n_reservoir_deleted: int = 0  # non-tree reservoir entries removed
+    n_already_dead: int = 0  # pairs already tombstoned (legacy defer mode)
+    n_dropped: int = 0  # self-loops / in-batch duplicates of the request
+    n_unhealed: int = 0  # forest deletions not certifiably healed
+    n_replacements: int = 0  # reservoir edges promoted into the forest
 
 
 class StreamEngine:
@@ -110,7 +133,9 @@ class StreamEngine:
         buffer at the cost of a bounded number of recompiles
         (≤ log2(batch_capacity / min_capacity) shapes each way), surfaced
         as ``UpdateStats.recompiles``.
-    compact_trigger: tombstoned-fraction threshold that forces compaction.
+    compact_trigger: tombstoned-fraction threshold that forces compaction
+        (legacy ``exact_deletes=False`` mode only; exact deletions compact
+        as part of every replacement search).
     pack: use the pack32 single-reduction MSF inner loop. ``None`` (auto)
         enables it while every inserted weight has been integral in
         [0, 255] (the paper's regime — tracked incrementally, so one
@@ -131,7 +156,19 @@ class StreamEngine:
         applies: its segment ids are sorted after the device sort.
     coarsen_threshold: live undirected union edges (forest + batch) at
         which the coarsen recompute kicks in; below it the flat solve is
-        cheaper than the level machinery.
+        cheaper than the level machinery. :meth:`recertify` applies the
+        same threshold to the supplied edge count (the coarsen-assisted
+        recertification path).
+    reservoir_capacity: total non-tree edges retained across components
+        (0 disables retention — every loser eviction immediately marks
+        its component lossy, so forest deletions there are unhealed).
+    reservoir_per_component: retained-entry cap per component
+        (cheapest-first under the MSF's own (w, gid) order).
+    exact_deletes: ``True`` (default) runs replacement-edge search on
+        every forest-edge deletion, publishing the true MSF;
+        ``False`` restores the legacy tombstone semantics (republish
+        ``stale=True``, splits land at compaction, lost replacements are
+        never recovered).
     variant / shortcut / capacity: forwarded to ``repro.core.msf``.
     """
 
@@ -147,6 +184,9 @@ class StreamEngine:
         segmin: str = "auto",
         coarsen=None,
         coarsen_threshold: int = 1 << 15,
+        reservoir_capacity: int = 4096,
+        reservoir_per_component: int = 256,
+        exact_deletes: bool = True,
         variant: str = "complete",
         shortcut: str = "complete",
         capacity: int = 1 << 16,
@@ -205,6 +245,19 @@ class StreamEngine:
         self._next_gid = 0
         self._version = 0
 
+        # Replacement-edge reservoir (DESIGN.md §6.4): race losers stay
+        # available as deletion replacements; ``_lossy`` marks vertices of
+        # components whose reservoir evicted entries (deletions there are
+        # not certifiable); ``_unhealed`` counts uncertified deletions
+        # since the last recertification.
+        self.exact_deletes = bool(exact_deletes)
+        self._reservoir = delta.Reservoir(
+            self.n, reservoir_capacity, reservoir_per_component
+        )
+        self._lossy = np.zeros(self.n, bool)
+        self._canon = np.arange(self.n, dtype=np.int32)
+        self._unhealed = 0
+
         self.snapshots = SnapshotStore()
         self.last_union_shape: tuple | None = None
         self._publish(stale=False, parent=np.arange(self.n, dtype=np.int32))
@@ -242,6 +295,17 @@ class StreamEngine:
     def n_forest_edges(self) -> int:
         return self._count - self._n_dead
 
+    @property
+    def unhealed(self) -> int:
+        """Forest deletions not certifiably healed since the last
+        recertification — snapshots stay ``stale`` while this is > 0."""
+        return self._unhealed
+
+    @property
+    def reservoir_size(self) -> int:
+        """Non-tree edges currently retained as replacement candidates."""
+        return len(self._reservoir)
+
     def forest_edges(self):
         """Copies of the live forest rows: (lo, hi, w, gid)."""
         live = ~self._dead[: self._count]
@@ -264,9 +328,12 @@ class StreamEngine:
     def insert_batch(self, u, v, w) -> UpdateStats:
         """Apply one batch of undirected weighted edge insertions.
 
-        Exact MSF maintenance: duplicates of live edges are dropped (or
-        treated as weight decreases, keeping the stable gid), new edges
-        get fresh gids, and the forest is recomputed over forest ∪ batch.
+        Exact MSF maintenance: duplicates of live forest edges are
+        dropped (or treated as weight decreases, keeping the stable gid),
+        duplicates of reservoir entries are *revived* — pulled back into
+        the union solve at the minimum of the two weights, keeping the
+        reservoir gid — new edges get fresh gids, and the forest is
+        recomputed over forest ∪ batch.
         """
         pb = delta.prepare_batch(u, v, w, self.n)
         if pb.count > self.batch_capacity:
@@ -282,14 +349,26 @@ class StreamEngine:
         if plan.n_decrease:
             rows = self._live_rows[plan.live_pos[plan.is_decrease]]
             self._w[rows] = np.minimum(self._w[rows], pb.w[plan.is_decrease])
-        # New edges: assign stable gids.
+        # Edges absent from the forest: revive reservoir duplicates
+        # (stable gid, min weight — a cheaper re-insert may displace a
+        # forest edge, so it must re-enter the race), fresh gids for the
+        # truly new.
         new_lo = pb.lo[plan.is_new]
         new_hi = pb.hi[plan.is_new]
-        new_w = pb.w[plan.is_new]
-        new_gid = np.arange(
-            self._next_gid, self._next_gid + plan.n_new, dtype=np.int32
+        new_w = pb.w[plan.is_new].copy()
+        new_gid = np.empty(plan.n_new, np.int32)
+        res_rows = self._reservoir.lookup(new_lo, new_hi)
+        revived = res_rows >= 0
+        n_revived = int(revived.sum())
+        if n_revived:
+            _, _, r_w, r_gid = self._reservoir.remove_rows(res_rows[revived])
+            new_w[revived] = np.minimum(new_w[revived], r_w)
+            new_gid[revived] = r_gid
+        n_fresh = plan.n_new - n_revived
+        new_gid[~revived] = np.arange(
+            self._next_gid, self._next_gid + n_fresh, dtype=np.int32
         )
-        self._next_gid += plan.n_new
+        self._next_gid += n_fresh
         r = self._run_union(new_lo, new_hi, new_w, new_gid)
         return UpdateStats(
             version=self._version,
@@ -303,23 +382,38 @@ class StreamEngine:
             union_directed_edges=self.last_union_shape[0],
             batch_capacity=self._cap_cur,
             recompiles=self.recompiles,
+            n_revived=n_revived,
+            reservoir_size=len(self._reservoir),
         )
 
     @_spanned("stream.delete")
     def delete_batch(self, u, v) -> DeleteStats:
-        """Tombstone a batch of undirected edges (by endpoints).
+        """Delete a batch of undirected edges (by endpoints) — exactly.
 
-        Edges not currently in the forest are counted as missing (either
-        never inserted, or discarded as non-forest edges by
-        sparsification). The snapshot is republished with ``stale=True``;
-        compaction (automatic past ``compact_trigger``, or explicit) makes
-        the component splits visible.
+        Forest edges are tombstoned and immediately *healed*: the
+        reservoir entries bucketed under each split component re-enter a
+        union solve (chunked to the padded batch capacity, so the
+        executable shapes stay bounded), and the republished snapshot is
+        the true MSF of the surviving edge multiset. Reservoir entries
+        named by the batch are removed in place (non-tree removals never
+        change the forest). A deletion is **unhealed** — and the snapshot
+        stays ``stale`` — only when the split component's reservoir had
+        evicted entries (``n_unhealed``; recover via :meth:`recertify`).
+        With ``exact_deletes=False`` the legacy semantics apply:
+        tombstone, republish ``stale=True``, splits land at compaction.
         """
-        pb = delta.prepare_batch(u, v, np.zeros(len(np.asarray(u))), self.n)
+        u_arr = np.atleast_1d(np.asarray(u))
+        pb = delta.prepare_batch(
+            u_arr, v, np.zeros(u_arr.shape[0]), self.n
+        )
+        n_forest_deleted = 0
+        n_already_dead = 0
+        n_reservoir_deleted = 0
+        n_missing = 0
+        dead_comps: list[np.ndarray] = []  # one comp root per deleted edge
         # Deletions are not bounded by batch_capacity (nothing enters the
         # union buffer); probe the live index in capacity-sized chunks so
         # the device lookup kernel keeps its one compiled shape.
-        n_deleted = 0
         for k in range(0, pb.count, self.batch_capacity):
             chunk = delta.PreparedBatch(
                 lo=pb.lo[k : k + self.batch_capacity],
@@ -333,29 +427,99 @@ class StreamEngine:
             )
             found = ~plan.is_new
             rows = self._live_rows[plan.live_pos[found]]
-            newly_dead = rows[~self._dead[rows]]
+            alive = ~self._dead[rows]
+            newly_dead = rows[alive]
+            n_already_dead += int((~alive).sum())
             self._dead[newly_dead] = True
             self._n_dead += len(newly_dead)
-            # Keep the reported weight equal to the *live* edge sum so a
-            # stale snapshot is stale in connectivity only, never in weight.
-            self._weight -= float(self._w[newly_dead].sum())
-            n_deleted += len(newly_dead)
-        n_missing = pb.count - n_deleted
+            n_forest_deleted += len(newly_dead)
+            if len(newly_dead):
+                dead_comps.append(self._canon[self._lo[newly_dead]])
+            # Misses against the live forest: already-tombstoned rows
+            # (legacy defer mode), then the reservoir, else truly missing.
+            miss_lo = chunk.lo[plan.is_new]
+            miss_hi = chunk.hi[plan.is_new]
+            if len(miss_lo):
+                in_dead = np.zeros(len(miss_lo), bool)
+                dead_rows = np.flatnonzero(self._dead[: self._count])
+                if len(dead_rows):
+                    dk = edge_keys(
+                        self._lo[dead_rows], self._hi[dead_rows], self.n
+                    )
+                    in_dead = np.isin(
+                        edge_keys(miss_lo, miss_hi, self.n), dk
+                    )
+                    # rows tombstoned by *this* call were still in the
+                    # live index above, so matches here are prior dead
+                    n_already_dead += int(in_dead.sum())
+                rem = np.flatnonzero(~in_dead)
+                res_rows = self._reservoir.lookup(
+                    miss_lo[rem], miss_hi[rem]
+                )
+                hit = res_rows >= 0
+                if hit.any():
+                    self._reservoir.remove_rows(res_rows[hit])
+                n_reservoir_deleted += int(hit.sum())
+                n_missing += int((~hit).sum())
+        if n_forest_deleted:
+            # Keep the reported weight equal to the *live* edge sum —
+            # recomputed from the rows, never decremented (float32
+            # decrements drift over long delete/insert cycles).
+            self._weight = self._live_weight()
+        n_unhealed_new = 0
+        n_replacements = 0
         compacted = False
-        if self._n_dead and self._n_dead >= self.compact_trigger * max(
-            1, self._count
+        if n_forest_deleted and self.exact_deletes:
+            per_edge = np.concatenate(dead_comps)
+            if self._lossy.any():
+                lossy_comp = np.zeros(self.n, bool)
+                lossy_comp[np.unique(self._canon[self._lossy])] = True
+                n_unhealed_new = int(lossy_comp[per_edge].sum())
+            self._unhealed += n_unhealed_new
+            if n_unhealed_new:
+                obs.counter("stream.reservoir.exhausted").inc(n_unhealed_new)
+            # Replacement-edge search: every reservoir entry of a split
+            # component re-enters the union solve (cheapest-first across
+            # capacity-sized chunks — the sparsification identity makes
+            # the chunked result identical to one big solve).
+            cl, ch, cw, cg = self._reservoir.take_components(
+                np.unique(per_edge)
+            )
+            if len(cl):
+                obs.counter("stream.reservoir.hits").inc(len(cl))
+                order = np.argsort(cw, kind="stable")
+                for k in range(0, len(cl), self._cap_cur):
+                    sl = order[k : k + self._cap_cur]
+                    self._run_union(cl[sl], ch[sl], cw[sl], cg[sl])
+                live_gids = self._gid[: self._count][
+                    ~self._dead[: self._count]
+                ]
+                n_replacements = int(np.isin(cg, live_gids).sum())
+            else:
+                empty = np.zeros(0, np.int32)
+                self._run_union(empty, empty, np.zeros(0, np.float32), empty)
+            compacted = True
+        elif (
+            n_forest_deleted
+            and self._n_dead
+            and self._n_dead >= self.compact_trigger * max(1, self._count)
         ):
             self.compact()
             compacted = True
         else:
             self._version += 1
-            self._publish(stale=self._n_dead > 0)
+            self._publish(stale=self._n_dead > 0 or self._unhealed > 0)
             self._refresh_live_index()
         return DeleteStats(
             version=self._version,
-            n_deleted=n_deleted,
+            n_deleted=n_forest_deleted,
             n_missing=n_missing,
             compacted=compacted,
+            n_reservoir_deleted=n_reservoir_deleted,
+            n_already_dead=n_already_dead,
+            n_dropped=pb.dropped,
+            n_unhealed=n_unhealed_new,
+            n_replacements=n_replacements,
         )
 
     @_spanned("stream.compact")
@@ -376,6 +540,104 @@ class StreamEngine:
             union_directed_edges=self.last_union_shape[0],
             batch_capacity=self._cap_cur,
             recompiles=self.recompiles,
+            n_revived=0,
+            reservoir_size=len(self._reservoir),
+        )
+
+    @_spanned("stream.recertify")
+    def recertify(self, u, v, w) -> UpdateStats:
+        """Rebuild forest + reservoir exactly from a caller-supplied edge
+        source — the recovery path after unhealed deletions.
+
+        ``(u, v, w)`` is the full surviving edge multiset (e.g. replayed
+        from the system of record). Gids stay stable: supplied pairs that
+        match a live forest or reservoir entry keep that entry's gid;
+        unmatched pairs — exactly the edges the bounded reservoir had
+        evicted — get fresh ones. The solve is coarsen-assisted past
+        ``coarsen_threshold`` edges (the fused contract-and-filter
+        levels) and flat below it; the buffer pads to the next power of
+        two so repeated recertifications reuse executables. Afterwards
+        the reservoir is refilled from the race losers, lossy marks are
+        reset (modulo refill evictions), ``unhealed`` drops to 0 and the
+        published snapshot is exact (``stale=False``).
+        """
+        pb = delta.prepare_batch(u, v, w, self.n)
+        # Thread stable gids through by canonical pair key.
+        live = np.flatnonzero(~self._dead[: self._count])
+        r_lo, r_hi, _, r_gid, _ = self._reservoir.edges()
+        known_keys = np.concatenate(
+            [
+                edge_keys(self._lo[live], self._hi[live], self.n),
+                edge_keys(r_lo, r_hi, self.n),
+            ]
+        )
+        known_gids = np.concatenate([self._gid[live], r_gid])
+        order = np.argsort(known_keys, kind="stable")
+        known_keys, known_gids = known_keys[order], known_gids[order]
+        kq = edge_keys(pb.lo, pb.hi, self.n)
+        gid = np.empty(pb.count, np.int32)
+        match = np.zeros(pb.count, bool)
+        if len(known_keys) and pb.count:
+            j = np.clip(np.searchsorted(known_keys, kq), 0, len(known_keys) - 1)
+            match = known_keys[j] == kq
+            gid[match] = known_gids[j[match]]
+        n_fresh = int((~match).sum())
+        gid[~match] = np.arange(
+            self._next_gid, self._next_gid + n_fresh, dtype=np.int32
+        )
+        self._next_gid += n_fresh
+        # The supplied multiset replaces the engine's history, so
+        # packability restarts from it instead of the running conjunction.
+        ok = weights_packable(pb.w)
+        if not ok and self._pack is True:
+            raise ValueError(
+                "pack=True requires integral weights in [0, 255]; "
+                "construct with pack=None/False for general weights"
+            )
+        self._packable = ok
+        cap = next_pow2(max(pb.count, 1), 1)
+        use_pack = (
+            self._pack
+            if self._pack is not None
+            else self._packable and cap < PACK_IDX_MASK
+        )
+        if use_pack and cap >= PACK_IDX_MASK:
+            raise ValueError(
+                f"pack=True needs local eids < 2^24 - 1; recertify over "
+                f"{pb.count} edges overflows the pack32 index field"
+            )
+        lo_u = np.zeros(cap, np.int32)
+        hi_u = np.zeros(cap, np.int32)
+        w_u = np.full(cap, np.inf, np.float32)
+        gid_u = np.full(cap, -1, np.int32)
+        valid_u = np.zeros(cap, bool)
+        # gid-ordered slots, as in _run_union: ties resolve to the
+        # strict (w, gid) order, so the rebuilt forest is the same one
+        # incremental maintenance over this multiset would have produced
+        order = np.argsort(gid, kind="stable")
+        lo_u[: pb.count], hi_u[: pb.count] = pb.lo[order], pb.hi[order]
+        w_u[: pb.count], gid_u[: pb.count] = pb.w[order], gid[order]
+        valid_u[: pb.count] = True
+        g = self._union_graph(lo_u, hi_u, w_u, valid_u)
+        self._union_shapes.add((tuple(g.src.shape), bool(use_pack)))
+        self.last_union_shape = tuple(g.src.shape)
+        r = self._solve_graph(g, pb.count, bool(use_pack))
+        self._unhealed = 0
+        self._commit(r, lo_u, hi_u, w_u, gid_u, valid_u, reset_reservoir=True)
+        return UpdateStats(
+            version=self._version,
+            weight=self._weight,
+            n_components=self.snapshots.acquire().n_components,
+            n_forest_edges=self._count,
+            n_new=n_fresh,
+            n_decrease=0,
+            n_drop=pb.dropped,
+            iterations=int(r.iterations),
+            union_directed_edges=self.last_union_shape[0],
+            batch_capacity=self._cap_cur,
+            recompiles=self.recompiles,
+            n_revived=int(match.sum()),
+            reservoir_size=len(self._reservoir),
         )
 
     # ------------------------------------------------------------------
@@ -418,29 +680,15 @@ class StreamEngine:
         # pack32(255, 2^24−1) == identity collision.
         return self._packable and self.union_edge_capacity < PACK_IDX_MASK
 
-    @_spanned("stream.union_solve")
-    def _run_union(self, b_lo, b_hi, b_w, b_gid):
-        """MSF over (live forest ∪ batch) in the fixed-capacity union
-        buffer; rewrite the store from the result and publish a snapshot."""
-        U = self.union_edge_capacity
-        lo_u = np.zeros(U, np.int32)
-        hi_u = np.zeros(U, np.int32)
-        w_u = np.full(U, np.inf, np.float32)
-        gid_u = np.full(U, -1, np.int32)
-        valid_u = np.zeros(U, bool)
+    def _live_weight(self) -> float:
+        """Exact live-row weight sum (float64 accumulate — the published
+        weight is always recomputed from the rows, never decremented)."""
+        live = ~self._dead[: self._count]
+        return float(self._w[: self._count][live].sum(dtype=np.float64))
 
-        live = np.flatnonzero(~self._dead[: self._count])
-        f = len(live)
-        lo_u[:f], hi_u[:f] = self._lo[live], self._hi[live]
-        w_u[:f], gid_u[:f] = self._w[live], self._gid[live]
-        valid_u[:f] = True
-        b = len(b_lo)
-        sl = slice(self.forest_capacity, self.forest_capacity + b)
-        lo_u[sl], hi_u[sl], w_u[sl], gid_u[sl] = b_lo, b_hi, b_w, b_gid
-        valid_u[sl] = True
-
-        local_eid = np.arange(U, dtype=np.int32)
-        g = Graph(
+    def _union_graph(self, lo_u, hi_u, w_u, valid_u) -> Graph:
+        local_eid = np.arange(len(lo_u), dtype=np.int32)
+        return Graph(
             src=np.concatenate([lo_u, hi_u]),
             dst=np.concatenate([hi_u, lo_u]),
             w=np.concatenate([w_u, w_u]),
@@ -448,12 +696,11 @@ class StreamEngine:
             valid=np.concatenate([valid_u, valid_u]),
             n=self.n,
         )
-        use_pack = self._use_pack()
-        # pack is a jit-static arg: flipping it re-traces even at an
-        # already-seen buffer shape, so it is part of the executable key.
-        self._union_shapes.add((tuple(g.src.shape), use_pack))
-        self.last_union_shape = tuple(g.src.shape)
-        if self._coarsen_cfg is not None and f + b >= self.coarsen_threshold:
+
+    def _solve_graph(self, g: Graph, live_edges: int, use_pack: bool):
+        """MSF over one padded union graph — fused coarsen levels past the
+        live-edge threshold, the flat solve below it."""
+        if self._coarsen_cfg is not None and live_edges >= self.coarsen_threshold:
             from repro.coarsen.engine import CoarsenMSF  # lazy: layer cycle
 
             eng = CoarsenMSF(
@@ -475,19 +722,90 @@ class StreamEngine:
                 segmin=self._segmin if use_pack else None,
                 **self._msf_opts,
             )
+        return r
 
+    @_spanned("stream.union_solve")
+    def _run_union(self, b_lo, b_hi, b_w, b_gid):
+        """MSF over (live forest ∪ batch) in the fixed-capacity union
+        buffer; rewrite the store from the result and publish a snapshot."""
+        U = self.union_edge_capacity
+        lo_u = np.zeros(U, np.int32)
+        hi_u = np.zeros(U, np.int32)
+        w_u = np.full(U, np.inf, np.float32)
+        gid_u = np.full(U, -1, np.int32)
+        valid_u = np.zeros(U, bool)
+
+        live = np.flatnonzero(~self._dead[: self._count])
+        f = len(live)
+        b = len(b_lo)
+        m = f + b
+        # Fill slots [0, m) in gid order: the MSF kernel breaks weight
+        # ties by minimum local eid, so gid-ordered slots make the solve
+        # implement the strict (w, gid) total order — the MSF is then
+        # *unique*, which is what keeps reservoir entries non-tree under
+        # insertions and makes chunked heals order-independent.
+        lo_m = np.concatenate([self._lo[live], b_lo])
+        hi_m = np.concatenate([self._hi[live], b_hi])
+        w_m = np.concatenate([self._w[live], b_w])
+        gid_m = np.concatenate([self._gid[live], b_gid])
+        order = np.argsort(gid_m, kind="stable")
+        lo_u[:m], hi_u[:m] = lo_m[order], hi_m[order]
+        w_u[:m], gid_u[:m] = w_m[order], gid_m[order]
+        valid_u[:m] = True
+
+        g = self._union_graph(lo_u, hi_u, w_u, valid_u)
+        use_pack = self._use_pack()
+        # pack is a jit-static arg: flipping it re-traces even at an
+        # already-seen buffer shape, so it is part of the executable key.
+        self._union_shapes.add((tuple(g.src.shape), use_pack))
+        self.last_union_shape = tuple(g.src.shape)
+        r = self._solve_graph(g, f + b, use_pack)
+        self._commit(r, lo_u, hi_u, w_u, gid_u, valid_u)
+        return r
+
+    def _commit(
+        self, r, lo_u, hi_u, w_u, gid_u, valid_u, *, reset_reservoir=False
+    ):
+        """Rewrite the store from one MSF result over a padded union
+        buffer, retain the race losers in the reservoir, and publish."""
         n_f = int(r.n_msf_edges)
         sel = np.asarray(r.msf_eids)[:n_f]  # local union indices → rows
+        canon = _canonical_labels(r.parent)
+        self._canon = canon
+        # Non-tree retention: every valid union slot that lost the race
+        # goes to the reservoir under its (intra-)component bucket.
+        win = np.zeros(len(valid_u), bool)
+        win[sel] = True
+        lose = np.flatnonzero(valid_u & ~win)
+        if reset_reservoir:
+            self._reservoir.clear()
+            self._lossy[:] = False
+        else:
+            # existing entries move to their merged components first, so
+            # the per-component caps see the post-solve partition
+            self._reservoir.rebucket(canon)
+        evicted, n_evicted = self._reservoir.absorb(
+            lo_u[lose], hi_u[lose], w_u[lose], gid_u[lose], canon[lo_u[lose]]
+        )
+        if n_evicted:
+            obs.counter("stream.reservoir.evictions").inc(n_evicted)
+            self._lossy |= np.isin(canon, evicted)
+        if self._lossy.any():
+            # Lossiness is a component property: normalize per-vertex
+            # marks so merges inherit it and later splits keep both sides
+            # conservatively flagged.
+            comp_lossy = np.zeros(self.n, bool)
+            comp_lossy[np.unique(canon[self._lossy])] = True
+            self._lossy = comp_lossy[canon]
         self._lo[:n_f], self._hi[:n_f] = lo_u[sel], hi_u[sel]
         self._w[:n_f], self._gid[:n_f] = w_u[sel], gid_u[sel]
         self._dead[:] = False
         self._count = n_f
         self._n_dead = 0
-        self._weight = float(r.weight)
+        self._weight = self._live_weight()
         self._version += 1
-        self._publish(stale=False, parent=r.parent)
+        self._publish(stale=self._unhealed > 0, parent=canon)
         self._refresh_live_index()
-        return r
 
     def _publish(self, *, stale: bool, parent=None):
         if parent is None:
@@ -499,6 +817,7 @@ class StreamEngine:
                 self._weight,
                 self.n_forest_edges,
                 stale=stale,
+                n_unhealed=self._unhealed,
             )
         )
 

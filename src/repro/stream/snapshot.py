@@ -5,8 +5,10 @@ never observe that in-flight state. The protocol:
 
 - a :class:`Snapshot` is an *immutable* value: version counter, canonical
   parent labels, per-vertex component sizes, component count, total forest
-  weight, forest edge count, and a ``stale`` bit (set between a tombstone
-  batch and the compaction that makes its effect visible);
+  weight, forest edge count, a ``stale`` bit (exact-delete mode: set only
+  while deletions remain unhealed, see ``n_unhealed``; legacy defer mode:
+  set between a tombstone batch and the compaction that makes its effect
+  visible), and the ``n_unhealed`` count behind it;
 - the :class:`SnapshotStore` keeps two slots. A publisher writes the fresh
   snapshot into the *inactive* slot and then flips the active index — a
   single reference swap, so a reader that ``acquire()``-d the old snapshot
@@ -32,7 +34,8 @@ class Snapshot(NamedTuple):
     n_components: int
     weight: float  # total forest weight
     n_forest_edges: int
-    stale: bool = False  # True ⇒ tombstones pending compaction
+    stale: bool = False  # True ⇒ forest may diverge from the true MSF
+    n_unhealed: int = 0  # deletions not certifiably healed (exact mode)
 
 
 @jax.jit
@@ -52,6 +55,7 @@ def make_snapshot(
     weight: float,
     n_forest_edges: int,
     stale: bool = False,
+    n_unhealed: int = 0,
 ) -> Snapshot:
     comp_size, ncc = _component_stats(jnp.asarray(parent, jnp.int32))
     return Snapshot(
@@ -62,6 +66,7 @@ def make_snapshot(
         weight=float(weight),
         n_forest_edges=int(n_forest_edges),
         stale=bool(stale),
+        n_unhealed=int(n_unhealed),
     )
 
 

@@ -227,3 +227,203 @@ def test_engines_agree_property(n, m, wlevels, multi, seed, dist_mesh, dist_mesh
     w = rng.integers(1, wlevels + 1, m).astype(np.float64)
     g = _multigraph(u, v, w, n) if multi else from_edges(u, v, w, n)
     _check_all_engines(g, dist_mesh, dist_mesh_shape)
+
+
+# ---------------------------------------------------------------------------
+# dynamic-vs-recompute oracle: the stream engine under interleaved
+# insert/delete/compact traffic equals flat_msf over the surviving multiset
+# (weight, MSF gid set, and component partition) after EVERY published
+# snapshot — exact deletions, DESIGN.md §6.4
+# ---------------------------------------------------------------------------
+
+
+class _SurvivorOracle:
+    """Mirror of the engine's surviving edge multiset and gid assignment.
+
+    The engine's rules, replayed exactly: ``prepare_batch`` dedupes to
+    canonical (lo, hi) pairs in sorted-key order; a pair already known
+    (forest or reservoir) keeps its gid and takes the minimum weight; a
+    fresh pair gets the next sequential gid in batch order; a deleted
+    pair leaves the multiset.
+    """
+
+    def __init__(self, n):
+        from repro.stream import delta
+
+        self._delta = delta
+        self.n = n
+        self.edges = {}  # (lo, hi) -> [w, gid]
+        self.next_gid = 0
+
+    def insert(self, u, v, w):
+        pb = self._delta.prepare_batch(u, v, w, self.n)
+        for i in range(pb.count):
+            k = (int(pb.lo[i]), int(pb.hi[i]))
+            if k in self.edges:
+                self.edges[k][0] = min(self.edges[k][0], float(pb.w[i]))
+            else:
+                self.edges[k] = [float(pb.w[i]), self.next_gid]
+                self.next_gid += 1
+
+    def delete(self, u, v):
+        zeros = np.zeros(np.atleast_1d(np.asarray(u)).shape[0])
+        pb = self._delta.prepare_batch(u, v, zeros, self.n)
+        for i in range(pb.count):
+            self.edges.pop((int(pb.lo[i]), int(pb.hi[i])), None)
+
+    def recompute(self):
+        """(weight, MSF gid set, canonical partition) via flat msf over
+        the surviving multiset, gid-ordered so weight ties break the same
+        way the engine's union buffer does."""
+        n = self.n
+        if not self.edges:
+            return 0.0, set(), np.arange(n)
+        keys = list(self.edges)
+        gid = np.array([self.edges[k][1] for k in keys], np.int32)
+        order = np.argsort(gid, kind="stable")
+        lo = np.array([k[0] for k in keys], np.int32)[order]
+        hi = np.array([k[1] for k in keys], np.int32)[order]
+        w = np.array([self.edges[k][0] for k in keys], np.float32)[order]
+        gid = gid[order]
+        m = len(lo)
+        cap = 1
+        while cap < m:
+            cap *= 2
+        L = np.zeros(cap, np.int32)
+        H = np.zeros(cap, np.int32)
+        W = np.full(cap, np.inf, np.float32)
+        V = np.zeros(cap, bool)
+        L[:m], H[:m], W[:m], V[:m] = lo, hi, w, True
+        eid = np.arange(cap, dtype=np.int32)
+        g = Graph(
+            src=np.concatenate([L, H]),
+            dst=np.concatenate([H, L]),
+            w=np.concatenate([W, W]),
+            eid=np.concatenate([eid, eid]),
+            valid=np.concatenate([V, V]),
+            n=n,
+        )
+        r = msf(g)
+        sel = np.asarray(r.msf_eids)[: int(r.n_msf_edges)]
+        p = np.asarray(r.parent)
+        while True:  # canonicalize
+            gp = p[p]
+            if np.array_equal(gp, p):
+                break
+            p = gp
+        return float(r.weight), set(gid[sel].tolist()), p
+
+
+def _run_dynamic_trace(n, steps, seed, batch_capacity=32):
+    """Interleave random insert / delete / compact ops; after every op the
+    published snapshot must equal the recompute oracle."""
+    from repro.stream.engine import StreamEngine
+
+    rng = np.random.default_rng(seed)
+    eng = StreamEngine(
+        n,
+        batch_capacity=batch_capacity,
+        reservoir_capacity=8192,
+        reservoir_per_component=8192,  # lossless retention: always healable
+    )
+    oracle = _SurvivorOracle(n)
+    for step in range(steps):
+        op = rng.random()
+        if op < 0.5 or not oracle.edges:
+            m = int(rng.integers(1, batch_capacity // 2))
+            u, v = rng.integers(0, n, m), rng.integers(0, n, m)
+            w = rng.integers(1, 50, m).astype(np.float64)
+            oracle.insert(u, v, w)
+            eng.insert_batch(u, v, w)
+        elif op < 0.7:  # delete known pairs (forest and/or reservoir)
+            ks = list(oracle.edges)
+            pick = rng.choice(len(ks), size=min(5, len(ks)), replace=False)
+            uu = np.array([ks[i][0] for i in pick])
+            vv = np.array([ks[i][1] for i in pick])
+            oracle.delete(uu, vv)
+            d = eng.delete_batch(uu, vv)
+            assert d.n_unhealed == 0, (step, d)
+        elif op < 0.9:  # delete a mix of present and absent pairs
+            m = int(rng.integers(1, 6))
+            uu, vv = rng.integers(0, n, m), rng.integers(0, n, m)
+            oracle.delete(uu, vv)
+            eng.delete_batch(uu, vv)
+        else:
+            eng.compact()
+        w_true, gids_true, p_true = oracle.recompute()
+        snap = eng.snapshots.acquire()
+        assert snap.stale == (eng.unhealed > 0), step
+        assert not snap.stale, step  # lossless reservoir: always exact
+        assert abs(snap.weight - w_true) <= max(1e-3, 1e-6 * abs(w_true)), (
+            step, snap.weight, w_true,
+        )
+        gids_eng = set(int(g) for g in eng.forest_gids())
+        assert gids_eng == gids_true, (
+            step, sorted(gids_eng - gids_true), sorted(gids_true - gids_eng),
+        )
+        assert _same_partition(snap.parent, p_true), step
+
+
+@pytest.mark.parametrize("n,steps,seed", [(32, 40, 0), (48, 40, 1), (16, 50, 2)])
+def test_stream_dynamic_matches_recompute_fixed_seed(n, steps, seed):
+    _run_dynamic_trace(n, steps, seed)
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    n=st.sampled_from([16, 24, 40]),
+    steps=st.integers(min_value=10, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stream_dynamic_matches_recompute_property(n, steps, seed):
+    """Property: under arbitrary interleaved insert/delete/compact traces
+    with lossless retention, every published snapshot IS the MSF of the
+    surviving edge multiset — weight, gid set, and partition."""
+    _run_dynamic_trace(n, steps, seed)
+
+
+def test_stream_bounded_reservoir_stale_only_when_unhealed():
+    """With a tiny reservoir the engine may lose replacements — but it
+    must KNOW: snapshots are stale exactly when unhealed deletions exist,
+    and recertify() from the oracle's multiset restores exactness."""
+    from repro.stream.engine import StreamEngine
+
+    n, seed = 24, 5
+    rng = np.random.default_rng(seed)
+    eng = StreamEngine(
+        n, batch_capacity=16, reservoir_capacity=2, reservoir_per_component=1
+    )
+    oracle = _SurvivorOracle(n)
+    for _ in range(25):
+        if rng.random() < 0.6 or not oracle.edges:
+            m = int(rng.integers(1, 8))
+            u, v = rng.integers(0, n, m), rng.integers(0, n, m)
+            w = rng.integers(1, 20, m).astype(np.float64)
+            oracle.insert(u, v, w)
+            eng.insert_batch(u, v, w)
+        else:
+            ks = list(oracle.edges)
+            pick = rng.choice(len(ks), size=min(3, len(ks)), replace=False)
+            uu = np.array([ks[i][0] for i in pick])
+            vv = np.array([ks[i][1] for i in pick])
+            oracle.delete(uu, vv)
+            eng.delete_batch(uu, vv)
+        snap = eng.snapshots.acquire()
+        assert snap.stale == (eng.unhealed > 0)
+        assert snap.n_unhealed == eng.unhealed
+        if not snap.stale:
+            # certified snapshots are still exact in weight
+            w_true, _, _ = oracle.recompute()
+            assert abs(snap.weight - w_true) <= max(1e-3, 1e-6 * abs(w_true))
+    # recovery: recertify from the surviving multiset
+    keys = list(oracle.edges)
+    eng.recertify(
+        np.array([k[0] for k in keys]),
+        np.array([k[1] for k in keys]),
+        np.array([oracle.edges[k][0] for k in keys]),
+    )
+    snap = eng.snapshots.acquire()
+    assert not snap.stale and eng.unhealed == 0
+    w_true, _, p_true = oracle.recompute()
+    assert abs(snap.weight - w_true) <= max(1e-3, 1e-6 * abs(w_true))
+    assert _same_partition(snap.parent, p_true)

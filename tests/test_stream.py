@@ -154,14 +154,43 @@ def test_batch_capacity_enforced_and_bad_input_rejected():
         eng.insert_batch([0], [99], [1.0])  # endpoint out of range
 
 
+def test_prepare_batch_accepts_scalars_and_empty():
+    """0-d/scalar inputs are one-edge batches, not a TypeError; empty
+    batches pass through with count 0."""
+    from repro.stream import delta
+
+    pb = delta.prepare_batch(3, 5, 1.0, 8)
+    assert pb.count == 1 and pb.dropped == 0
+    assert (int(pb.lo[0]), int(pb.hi[0]), float(pb.w[0])) == (3, 5, 1.0)
+    pb = delta.prepare_batch(np.int64(5), np.int64(3), np.float64(2.0), 8)
+    assert pb.count == 1 and int(pb.lo[0]) == 3 and int(pb.hi[0]) == 5
+    pb = delta.prepare_batch([], [], [], 8)
+    assert pb.count == 0 and pb.dropped == 0
+    pb = delta.prepare_batch(2, 2, 1.0, 8)  # scalar self-loop
+    assert pb.count == 0 and pb.dropped == 1
+    with pytest.raises(ValueError):
+        delta.prepare_batch([0, 1], [1], [1.0, 2.0], 8)  # shape mismatch
+
+
+def test_scalar_insert_and_delete_roundtrip():
+    eng = StreamingMSF(8, batch_capacity=4)
+    s = eng.insert_batch(0, 1, 1.5)
+    assert s.n_new == 1 and abs(eng.weight - 1.5) < 1e-6
+    d = eng.delete_batch(1, 0)
+    assert d.n_deleted == 1 and eng.weight == 0.0
+
+
 # ---------------------------------------------------------------------------
 # deletions: tombstone, staleness, compaction trigger
 # ---------------------------------------------------------------------------
 
 
 def test_delete_tombstones_then_compaction_splits():
+    """Legacy defer mode (exact_deletes=False): tombstone now, split at
+    compaction — the old trade-off, kept as an explicit opt-out."""
     n = 8
-    eng = StreamingMSF(n, batch_capacity=8, compact_trigger=10.0)  # manual
+    eng = StreamingMSF(n, batch_capacity=8, compact_trigger=10.0,
+                       exact_deletes=False)  # manual compaction
     # path 0-1-2-3
     eng.insert_batch([0, 1, 2], [1, 2, 3], [1.0, 2.0, 3.0])
     v_before = eng.version
@@ -199,9 +228,11 @@ def test_delete_batch_larger_than_capacity():
 
 
 def test_stale_snapshot_weight_matches_live_edges():
-    """Between tombstone and compaction the snapshot is stale in
-    *connectivity* only: weight and edge count always track live edges."""
-    eng = StreamingMSF(8, batch_capacity=8, compact_trigger=10.0)
+    """Between tombstone and compaction the legacy defer mode's snapshot
+    is stale in *connectivity* only: weight and edge count always track
+    live edges."""
+    eng = StreamingMSF(8, batch_capacity=8, compact_trigger=10.0,
+                       exact_deletes=False)
     eng.insert_batch([0, 1, 2], [1, 2, 3], [1.0, 2.0, 3.0])
     eng.delete_batch([1], [2])
     snap = eng.snapshots.acquire()
@@ -231,6 +262,217 @@ def test_insert_after_delete_is_consistent():
     assert eng.n_forest_edges == 3
     assert abs(snap.weight - 11.0) < 1e-6
     assert snap.n_components == n - 3
+
+
+# ---------------------------------------------------------------------------
+# exact deletions: replacement-edge reservoir (DESIGN.md §6.4)
+# ---------------------------------------------------------------------------
+
+
+def test_delete_forest_edge_heals_from_reservoir():
+    """Deleting a tree edge promotes the cheapest retained non-tree edge
+    crossing the cut — the published snapshot is the true MSF, not stale."""
+    n = 8
+    eng = StreamingMSF(n, batch_capacity=8)
+    # triangle: (0,2) loses the race and lands in the reservoir
+    eng.insert_batch([0, 1, 0], [1, 2, 2], [1.0, 2.0, 3.0])
+    assert eng.reservoir_size == 1
+    d = eng.delete_batch([1], [2])
+    assert d.n_deleted == 1 and d.compacted
+    assert d.n_replacements == 1 and d.n_unhealed == 0
+    snap = eng.snapshots.acquire()
+    assert not snap.stale and snap.n_unhealed == 0
+    assert snap.n_components == n - 2  # {0,1,2} still connected via (0,2)
+    assert abs(snap.weight - 4.0) < 1e-6
+    assert eng.reservoir_size == 0  # the replacement was consumed
+
+
+def test_delete_reservoir_edge_is_exact_without_heal():
+    """Deleting a non-tree edge removes it from the reservoir in place —
+    the forest is untouched and nothing needs to re-solve."""
+    eng = StreamingMSF(8, batch_capacity=8)
+    eng.insert_batch([0, 1, 0], [1, 2, 2], [1.0, 2.0, 3.0])
+    v0, w0 = eng.version, eng.weight
+    d = eng.delete_batch([0], [2])
+    assert d.n_deleted == 0 and d.n_reservoir_deleted == 1
+    assert d.n_missing == 0 and not d.compacted
+    assert eng.reservoir_size == 0 and eng.weight == w0
+    snap = eng.snapshots.acquire()
+    assert snap.version > v0 and not snap.stale
+    # the deleted non-tree edge must NOT come back as a replacement later
+    d2 = eng.delete_batch([1], [2])
+    assert d2.n_deleted == 1 and d2.n_replacements == 0
+    assert eng.snapshots.acquire().n_components == 8 - 1
+
+
+def test_delete_stats_counter_split():
+    """n_missing / n_already_dead / n_dropped are separate counters, and
+    prepare_batch's dropped self-loops/duplicates are no longer silently
+    discarded on the delete path."""
+    eng = StreamingMSF(8, batch_capacity=8)
+    eng.insert_batch([0, 1], [1, 2], [1.0, 2.0])
+    d = eng.delete_batch([3, 0, 0, 5], [3, 1, 1, 6])
+    assert d.n_deleted == 1  # (0,1)
+    assert d.n_missing == 1  # (5,6) never present
+    assert d.n_dropped == 2  # self-loop (3,3) + duplicate (0,1)
+    assert d.n_already_dead == 0
+
+
+def test_delete_already_dead_counted_in_legacy_mode():
+    """In defer mode a tombstoned edge deleted again is n_already_dead,
+    not n_missing."""
+    eng = StreamingMSF(8, batch_capacity=8, compact_trigger=10.0,
+                       exact_deletes=False)
+    eng.insert_batch([0, 1], [1, 2], [1.0, 2.0])
+    d1 = eng.delete_batch([0], [1])
+    assert d1.n_deleted == 1 and d1.n_already_dead == 0
+    d2 = eng.delete_batch([0], [1])
+    assert d2.n_deleted == 0 and d2.n_already_dead == 1 and d2.n_missing == 0
+
+
+def test_reservoir_reinsert_revives_stable_gid():
+    """Re-inserting a pair that lives in the reservoir pulls it back into
+    the race under its original gid at the minimum of the two weights."""
+    eng = StreamingMSF(8, batch_capacity=8)
+    eng.insert_batch([0, 1, 0], [1, 2, 2], [1.0, 2.0, 3.0])
+    _, _, _, gids = eng.forest_edges()
+    res_gid = ({0, 1, 2} - set(int(g) for g in gids)).pop()
+    s = eng.insert_batch([0], [2], [0.5])  # now the cheapest triangle edge
+    assert s.n_revived == 1 and s.n_new == 1
+    lo, hi, w, gid = eng.forest_edges()
+    m = (lo == 0) & (hi == 2)
+    assert m.any() and w[m][0] == 0.5 and gid[m][0] == res_gid
+    # the displaced (1,2) edge is retained as a replacement candidate
+    assert eng.reservoir_size == 1
+    assert abs(eng.weight - 1.5) < 1e-6
+
+
+def test_reservoir_exhaustion_marks_unhealed_then_recertify_recovers():
+    """With retention disabled every eviction is lossy: a forest deletion
+    there is unhealed (stale snapshot) until recertify() rebuilds from
+    the caller's surviving multiset."""
+    n = 8
+    eng = StreamingMSF(n, batch_capacity=8, reservoir_capacity=0)
+    eng.insert_batch([0, 1, 0], [1, 2, 2], [1.0, 2.0, 3.0])
+    assert eng.reservoir_size == 0  # (0,2) was evicted on absorb
+    d = eng.delete_batch([1], [2])
+    assert d.n_unhealed == 1 and d.n_replacements == 0
+    snap = eng.snapshots.acquire()
+    assert snap.stale and snap.n_unhealed == 1 and eng.unhealed == 1
+    # deletions elsewhere stay stale until recertification
+    s = eng.insert_batch([4], [5], [9.0])
+    assert eng.snapshots.acquire().stale
+    # recovery: replay the surviving multiset from the system of record
+    old_gids = set(int(g) for g in eng.forest_gids())
+    eng.recertify([0, 0, 4], [1, 2, 5], [1.0, 3.0, 9.0])
+    snap = eng.snapshots.acquire()
+    assert not snap.stale and snap.n_unhealed == 0 and eng.unhealed == 0
+    assert abs(snap.weight - 13.0) < 1e-6
+    assert snap.n_components == n - 3  # {0,1,2} reconnected via (0,2)
+    # surviving forest edges kept their gids through the rebuild
+    assert old_gids <= set(int(g) for g in eng.forest_gids()) | {-1}
+
+
+def test_per_component_cap_eviction_is_conservative():
+    """Evicting past the per-component cap marks the component lossy:
+    later forest deletions there report unhealed instead of silently
+    serving a wrong forest."""
+    eng = StreamingMSF(8, batch_capacity=8, reservoir_per_component=1)
+    # K4 on {0..3}: forest keeps 3 edges, 3 losers fight for 1 slot
+    eng.insert_batch([0, 0, 0, 1, 1, 2], [1, 2, 3, 2, 3, 3],
+                     [1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    assert eng.reservoir_size == 1
+    d = eng.delete_batch([0], [1])
+    assert d.n_unhealed == 1
+    assert eng.snapshots.acquire().stale
+
+
+def test_chunked_heal_with_many_candidates_is_exact():
+    """More replacement candidates than batch_capacity: the heal runs in
+    capacity-sized chunks and still lands on the true MSF."""
+    rng = np.random.default_rng(7)
+    n = 32
+    eng = StreamingMSF(n, batch_capacity=8, reservoir_capacity=4096,
+                       reservoir_per_component=4096)
+    batches = _random_batches(rng, n, 12, 8)
+    for u, v, w in batches:
+        eng.insert_batch(u, v, w)
+    assert eng.reservoir_size > 8  # heal must chunk
+    lo, hi, _, _ = eng.forest_edges()
+    d = eng.delete_batch([lo[0]], [hi[0]])
+    assert d.n_unhealed == 0
+    # oracle: full recompute over the surviving multiset
+    g = _accumulated(batches, n)
+    uu, vv, ww = np.asarray(g.src), np.asarray(g.dst), np.asarray(g.w)
+    half = np.asarray(g.valid) & (uu < vv)
+    keep = half & ~((np.minimum(uu, vv) == min(lo[0], hi[0]))
+                    & (np.maximum(uu, vv) == max(lo[0], hi[0])))
+    full = msf(from_edges(uu[keep], vv[keep], ww[keep].astype(np.float64), n))
+    snap = eng.snapshots.acquire()
+    assert not snap.stale
+    assert abs(snap.weight - float(full.weight)) < 1e-3
+    assert _same_partition(snap.parent, full.parent)
+
+
+def test_reservoir_obs_counters():
+    """stream.reservoir.{hits,evictions,exhausted} reach the metrics
+    registry."""
+    from repro.obs.metrics import default_registry
+
+    base = dict(default_registry().snapshot()["counters"])
+    eng = StreamingMSF(8, batch_capacity=8, reservoir_capacity=0)
+    eng.insert_batch([0, 1, 0], [1, 2, 2], [1.0, 2.0, 3.0])
+    eng.delete_batch([1], [2])
+    now = default_registry().snapshot()["counters"]
+
+    def delta_of(name):
+        return now.get(name, 0) - base.get(name, 0)
+
+    assert delta_of("stream.reservoir.evictions") >= 1
+    assert delta_of("stream.reservoir.exhausted") >= 1
+    eng2 = StreamingMSF(8, batch_capacity=8)
+    eng2.insert_batch([0, 1, 0], [1, 2, 2], [1.0, 2.0, 3.0])
+    eng2.delete_batch([1], [2])
+    now = default_registry().snapshot()["counters"]
+    assert delta_of("stream.reservoir.hits") >= 1
+
+
+def test_published_weight_exactly_equals_live_sum_after_mixed_workload():
+    """Regression (float32 drift): the published weight is recomputed from
+    the live rows at publish time, never decremented — bit-exact equality
+    with the float64 row sum even after a long insert/delete churn."""
+    rng = np.random.default_rng(11)
+    n = 64
+    eng = StreamingMSF(n, batch_capacity=32)
+    inserted = []
+    for _ in range(40):
+        m = int(rng.integers(1, 16))
+        u, v = rng.integers(0, n, m), rng.integers(0, n, m)
+        # fractional weights: exactly the regime where -= drifts
+        w = rng.random(m) * 10.0 + 0.1
+        eng.insert_batch(u, v, w)
+        inserted += [(int(a), int(b)) for a, b in zip(u, v) if a != b]
+        if inserted and rng.random() < 0.6:
+            k = int(rng.integers(1, min(6, len(inserted)) + 1))
+            picks = [inserted[i] for i in
+                     rng.choice(len(inserted), size=k, replace=False)]
+            eng.delete_batch([p[0] for p in picks], [p[1] for p in picks])
+        _, _, w_live, _ = eng.forest_edges()
+        assert eng.snapshots.acquire().weight == float(
+            w_live.sum(dtype=np.float64)
+        )
+
+
+def test_legacy_defer_mode_weight_exact_after_tombstones():
+    """The live-row weight recompute also fixes the defer path: tombstone
+    a few rows, no compaction, and the published weight still equals the
+    float64 live sum exactly."""
+    eng = StreamingMSF(16, batch_capacity=8, compact_trigger=10.0,
+                       exact_deletes=False)
+    eng.insert_batch([0, 1, 2, 3], [1, 2, 3, 4], [0.1, 0.2, 0.3, 0.4])
+    eng.delete_batch([1, 3], [2, 4])
+    _, _, w_live, _ = eng.forest_edges()
+    assert eng.snapshots.acquire().weight == float(w_live.sum(dtype=np.float64))
 
 
 # ---------------------------------------------------------------------------
