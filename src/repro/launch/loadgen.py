@@ -35,6 +35,15 @@ missed — the CI smoke gate of the serving path::
         --out SLO_loadgen_smoke.json
 
 Also reachable as ``python -m repro.launch.serve_graph --loadgen ...``.
+
+``--target tcp://host:port`` switches both load lanes onto the wire
+(DESIGN.md §13): point queries are pipelined over a ``serve/v1``
+connection to a ``repro.serve`` server (started with
+``serve_graph --serve``), which fuses them into micro-batches
+server-side; the writer churns inserts/deletes over a second
+connection. The report keeps the ``slo-report/v1`` schema and adds a
+``server`` block (end-of-run status + ``serve.*`` metrics) in place of
+the in-process ``batcher`` block.
 """
 from __future__ import annotations
 
@@ -55,6 +64,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="loadgen", description="open-loop SLO load harness"
     )
+    ap.add_argument("--target", metavar="tcp://HOST:PORT", default=None,
+                    help="drive a repro.serve server over the wire instead "
+                         "of an in-process plan (serve/v1 protocol; start "
+                         "one with `serve_graph --serve`). scale/edge-factor/"
+                         "seed/warm-frac must match the server's so the "
+                         "writer continues the same edge stream")
+    ap.add_argument("--warm-frac", type=float, default=0.25,
+                    help="[--target] fraction of the edge stream the server "
+                         "already inserted at warm-up; the remote writer "
+                         "starts after it")
+    ap.add_argument("--max-inflight", type=int, default=1024,
+                    help="[--target] pipelined queries in flight before "
+                         "arrivals drop (the open-loop admission bound)")
     ap.add_argument("--qps", type=float, default=200.0,
                     help="offered arrival rate (Poisson)")
     ap.add_argument("--duration", type=float, default=5.0,
@@ -114,8 +136,7 @@ def _arrival_schedule(rng, qps: float, duration: float) -> np.ndarray:
 
 def run(args) -> dict:
     from repro import obs
-    from repro.graphs.generators import rmat_graph
-    from repro.launch.serve_graph import undirected_edges
+    from repro.launch.serve_graph import edge_stream
     from repro.solve import SolveSpec, plan
     from repro.stream.service import MicroBatcher, QueryService, next_pow2
 
@@ -123,11 +144,8 @@ def run(args) -> dict:
     obs.metrics_reset()
 
     n = 1 << args.scale
-    g = rmat_graph(args.scale, args.edge_factor, seed=args.seed)
-    lo, hi, w = undirected_edges(g)
+    lo, hi, w = edge_stream(args.scale, args.edge_factor, args.seed)
     rng = np.random.default_rng(args.seed)
-    perm = rng.permutation(len(lo))
-    lo, hi, w = lo[perm], hi[perm], w[perm]
 
     stream = plan(
         n, SolveSpec(mode="stream", batch_capacity=args.writer_batch)
@@ -330,9 +348,265 @@ def run(args) -> dict:
     }
 
 
+def run_tcp(args) -> dict:
+    """Open-loop load over the wire: drive a ``repro.serve`` server with
+    pipelined ``serve/v1`` point queries (the server fuses them into
+    micro-batches) while a writer connection churns inserts/deletes.
+
+    Same three actors as :func:`run`, network-shaped: the **producer**
+    walks the Poisson schedule and pipelines one ``connected`` request
+    per arrival — admission is bounded by ``--max-inflight`` outstanding
+    futures and arrivals past the bound *drop* (open loop, never
+    blocks); a completion callback records end-to-end latency (scheduled
+    arrival → response decoded) and in-band rejections (``overloaded`` /
+    ``deadline`` from the server's own admission control). The
+    **writer** uses a second socket so write frames never head-of-line
+    block the pipelined query stream.
+    """
+    from repro import obs
+    from repro.launch.serve_graph import edge_stream
+    from repro.serve import ServeClient
+
+    obs.enable("metrics")
+    obs.metrics_reset()
+
+    qc = ServeClient(args.target)  # pipelined query connection
+    wc = ServeClient(args.target)  # writer connection (own socket)
+    try:
+        return _run_tcp(args, qc, wc, obs, edge_stream)
+    finally:
+        qc.close()
+        wc.close()
+
+
+def _run_tcp(args, qc, wc, obs, edge_stream) -> dict:
+    status0 = qc.status(check=True)["result"]
+    n = int(status0["n"])
+    if n != 1 << args.scale:
+        raise SystemExit(
+            f"server has n={n} but --scale {args.scale} implies "
+            f"n={1 << args.scale}; match the server's --scale"
+        )
+    lo, hi, w = edge_stream(args.scale, args.edge_factor, args.seed)
+    warm = int(len(lo) * args.warm_frac)
+
+    hist = obs.histogram("loadgen.e2e_latency_s")
+    dropped = obs.counter("loadgen.dropped")
+    timeouts = obs.counter("loadgen.timeout")
+
+    rng = np.random.default_rng(args.seed)
+    offs = _arrival_schedule(rng, args.qps, args.duration)
+    qu = rng.integers(0, n, size=len(offs))
+    qv = rng.integers(0, n, size=len(offs))
+
+    inflight = threading.Semaphore(args.max_inflight)
+    done = threading.Event()
+    lock = threading.Lock()
+    stats = {"answered": 0, "rejected": 0, "errors": 0, "max_version": -1}
+    outstanding = [0]
+
+    def on_response(fut, t_arr: float) -> None:
+        t_now = time.perf_counter()
+        inflight.release()
+        with lock:
+            outstanding[0] -= 1
+            if outstanding[0] == 0:
+                done.set()
+            try:
+                resp = fut.result()
+            except Exception:
+                stats["errors"] += 1
+                return
+            if resp.get("ok"):
+                stats["answered"] += 1
+                stats["max_version"] = max(
+                    stats["max_version"], resp.get("snapshot_version", -1)
+                )
+                lat = t_now - t_arr
+                hist.observe(lat)
+                if lat > args.timeout_ms / 1e3:
+                    timeouts.inc()
+            else:
+                # the server's admission control said no — that's a drop
+                # from the SLO's point of view, tracked separately
+                stats["rejected"] += 1
+                code = (resp.get("error") or {}).get("code", "unknown")
+                obs.counter(f"loadgen.rejected.{code}").inc()
+
+    stop_writer = threading.Event()
+    writer_stats = {
+        "updates": 0, "edges": 0, "deletes": 0, "edges_deleted": 0,
+        "replacements": 0, "unhealed": 0, "write_rejected": 0,
+    }
+
+    def writer() -> None:
+        pos = warm
+        interval = args.writer_interval_ms / 1e3
+        wrng = np.random.default_rng(args.seed + 1)
+        while not stop_writer.is_set():
+            try:
+                if args.delete_frac > 0 and wrng.random() < args.delete_frac:
+                    at = int(wrng.integers(0, max(1, pos - args.writer_batch)))
+                    end = min(at + max(1, args.writer_batch // 4), pos)
+                    resp = wc.delete(lo[at:end], hi[at:end])
+                    if resp.get("ok"):
+                        r = resp["result"]
+                        writer_stats["deletes"] += 1
+                        writer_stats["edges_deleted"] += end - at
+                        writer_stats["replacements"] += r["n_replacements"]
+                        writer_stats["unhealed"] = r["n_unhealed_new"]
+                    else:
+                        writer_stats["write_rejected"] += 1
+                else:
+                    if pos >= len(lo):
+                        pos = warm  # wrap; duplicate inserts are MSF no-ops
+                    end = min(pos + args.writer_batch, len(lo))
+                    resp = wc.insert(lo[pos:end], hi[pos:end], w[pos:end])
+                    if resp.get("ok"):
+                        writer_stats["updates"] += 1
+                        writer_stats["edges"] += end - pos
+                        pos = end
+                    else:
+                        writer_stats["write_rejected"] += 1
+            except (ConnectionError, OSError):
+                return  # server went away; the SLO gate will say so
+            stop_writer.wait(interval)
+
+    t_start = time.perf_counter()
+    wt = threading.Thread(target=writer, daemon=True)
+    wt.start()
+    for i, off in enumerate(offs):
+        lag = (t_start + off) - time.perf_counter()
+        if lag > 0:
+            time.sleep(lag)
+        if not inflight.acquire(blocking=False):
+            dropped.inc()  # admission bound hit: open-loop drop
+            continue
+        t_arr = t_start + off
+        with lock:
+            outstanding[0] += 1
+            done.clear()
+        try:
+            fut = qc.submit("connected", u=[int(qu[i])], v=[int(qv[i])],
+                            deadline_ms=args.timeout_ms)
+        except (ConnectionError, OSError):
+            inflight.release()
+            with lock:
+                outstanding[0] -= 1
+                stats["errors"] += 1
+            break
+        fut.add_done_callback(lambda f, t=t_arr: on_response(f, t))
+    # drain the pipeline: every submitted query gets its callback
+    with lock:
+        all_done = outstanding[0] == 0
+    if not all_done:
+        done.wait(timeout=max(10.0, 4 * args.timeout_ms / 1e3))
+    elapsed = time.perf_counter() - t_start
+    stop_writer.set()
+    wt.join(timeout=10.0)
+
+    try:
+        server_status = qc.status(check=True)["result"]
+        server_metrics = qc.metrics(check=True)["result"]["metrics"]
+    except Exception:
+        server_status, server_metrics = {}, {}
+
+    s = hist.summary() or {}
+    snap = obs.metrics_snapshot()
+    n_dropped = int(snap["counters"].get("loadgen.dropped", 0))
+    n_timeout = int(snap["counters"].get("loadgen.timeout", 0))
+    offered = len(offs)
+    answered = stats["answered"]
+    achieved_qps = answered / elapsed if elapsed > 0 else 0.0
+    # server-side rejections are unanswered offered load, same as drops
+    drop_frac = ((n_dropped + stats["rejected"] + stats["errors"]) / offered
+                 if offered else 0.0)
+
+    p50_ms = float(s.get("p50", 0.0)) * 1e3
+    p99_ms = float(s.get("p99", 0.0)) * 1e3
+    failures: list[str] = []
+    if answered == 0:
+        failures.append("no queries answered")
+    if p50_ms > args.slo_p50_ms:
+        failures.append(f"p50 {p50_ms:.1f}ms > target {args.slo_p50_ms}ms")
+    if p99_ms > args.slo_p99_ms:
+        failures.append(f"p99 {p99_ms:.1f}ms > target {args.slo_p99_ms}ms")
+    if drop_frac > args.max_drop_frac:
+        failures.append(
+            f"drop fraction {drop_frac:.3f} > target {args.max_drop_frac}"
+        )
+    if achieved_qps < args.min_qps_frac * args.qps:
+        failures.append(
+            f"achieved {achieved_qps:.1f} qps < "
+            f"{args.min_qps_frac:.2f} x offered {args.qps}"
+        )
+
+    return {
+        "schema": SCHEMA,
+        "env": _env(),
+        "config": {k: v for k, v in vars(args).items() if k != "out"},
+        "offered_qps": args.qps,
+        "achieved_qps": achieved_qps,
+        "duration_s": elapsed,
+        "queries": {
+            "offered": offered,
+            "answered": answered,
+            "dropped": n_dropped,
+            "rejected": stats["rejected"],
+            "errors": stats["errors"],
+            "timeouts": n_timeout,
+        },
+        "latency_ms": {
+            "p50": p50_ms,
+            "p95": float(s.get("p95", 0.0)) * 1e3,
+            "p99": p99_ms,
+            "min": float(s.get("min", 0.0)) * 1e3,
+            "max": float(s.get("max", 0.0)) * 1e3,
+            "mean": (float(s["sum"]) / s["count"] * 1e3) if s.get("count")
+            else 0.0,
+            "count": int(s.get("count", 0)),
+        },
+        "writer": {
+            "updates": writer_stats["updates"],
+            "edges_inserted": writer_stats["edges"],
+            "deletes": writer_stats["deletes"],
+            "edges_deleted": writer_stats["edges_deleted"],
+            "replacements": writer_stats["replacements"],
+            "unhealed": writer_stats["unhealed"],
+            "write_rejected": writer_stats["write_rejected"],
+            "snapshot_version": stats["max_version"],
+        },
+        "server": {
+            "target": args.target,
+            "status": server_status,
+            "metrics": {
+                "counters": {
+                    k: v for k, v in server_metrics.get("counters", {}).items()
+                    if k.startswith("serve.")
+                },
+                "histograms": {
+                    k: v
+                    for k, v in server_metrics.get("histograms", {}).items()
+                    if k.startswith("serve.")
+                },
+            },
+        },
+        "slo": {
+            "targets": {
+                "p50_ms": args.slo_p50_ms,
+                "p99_ms": args.slo_p99_ms,
+                "max_drop_frac": args.max_drop_frac,
+                "min_qps_frac": args.min_qps_frac,
+            },
+            "failures": failures,
+            "passed": not failures,
+        },
+    }
+
+
 def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
-    report = run(args)
+    report = run_tcp(args) if args.target else run(args)
     lat = report["latency_ms"]
     print(
         f"offered {report['offered_qps']:.0f} qps for "
@@ -352,7 +626,8 @@ def main(argv: list[str] | None = None) -> int:
         f"{report['writer']['replacements']} replacements, "
         f"{report['writer']['unhealed']} unhealed), snapshot "
         f"v{report['writer']['snapshot_version']}; "
-        f"batcher: {report['batcher']}"
+        + (f"batcher: {report['batcher']}" if "batcher" in report
+           else f"server: {report['server']['metrics']['counters']}")
     )
     if args.out:
         with open(args.out, "w") as f:

@@ -207,12 +207,19 @@ class _StreamPlanEngine:
         self._last = stats
         return self._report(iterations=stats.iterations)
 
-    def query(self, u, v):
+    @property
+    def service(self):
+        """The shared :class:`~repro.stream.service.QueryService` over
+        this engine's snapshot store — the read seam the serving tier
+        (``repro.serve``) batches through."""
         if self._service is None:
             from repro.stream.service import QueryService
 
             self._service = QueryService(self.engine.snapshots)
-        return self._service.connected(u, v)
+        return self._service
+
+    def query(self, u, v):
+        return self.service.connected(u, v)
 
 
 def _build_stream(target, rs: ResolvedSpec, mesh):

@@ -219,6 +219,21 @@ class Plan:
         return getattr(self._engine, "engine", self._engine)
 
     @property
+    def service(self):
+        """Stream mode: the engine's shared
+        :class:`~repro.stream.service.QueryService` — reads from the
+        published snapshot store, safe to call from any thread while the
+        single writer applies ``update()``/``delete()``. The serving
+        tier (``repro.serve.MSFServer``) batches through this seam."""
+        svc = getattr(self._stream(), "service", None)
+        if svc is None:
+            raise ValueError(
+                f"service is a stream-mode surface; this plan's mode "
+                f"is {self.mode!r}"
+            )
+        return svc
+
+    @property
     def cost(self):
         """Analytic :class:`~repro.solve.cost.PlanCost` of this plan's
         executable, computed once at build (``None`` when out of the

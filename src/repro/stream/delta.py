@@ -308,6 +308,38 @@ class Reservoir:
         rows = np.flatnonzero(np.isin(self._comp[: self._count], comps))
         return self.remove_rows(rows)
 
+    def state_dict(self) -> dict:
+        """Full-capacity column copies + live count — the durable state
+        of :mod:`repro.stream.persist` (fixed shapes, so a checkpoint
+        restores into any reservoir of the same capacity)."""
+        return {
+            "lo": self._lo.copy(),
+            "hi": self._hi.copy(),
+            "w": self._w.copy(),
+            "gid": self._gid.copy(),
+            "comp": self._comp.copy(),
+            "count": np.int64(self._count),
+        }
+
+    def restore_state(self, state: dict) -> None:
+        """Inverse of :meth:`state_dict`; rebuilds the sorted key index."""
+        lo = np.asarray(state["lo"], np.int32)
+        if lo.shape != self._lo.shape:
+            raise ValueError(
+                f"reservoir state capacity {lo.shape[0]} does not match "
+                f"this reservoir's capacity {self.capacity}"
+            )
+        count = int(state["count"])
+        if not 0 <= count <= self.capacity:
+            raise ValueError(f"reservoir state count {count} out of range")
+        self._lo = lo.copy()
+        self._hi = np.asarray(state["hi"], np.int32).copy()
+        self._w = np.asarray(state["w"], np.float32).copy()
+        self._gid = np.asarray(state["gid"], np.int32).copy()
+        self._comp = np.asarray(state["comp"], np.int32).copy()
+        self._count = count
+        self._reindex()
+
     def rebucket(self, canon: np.ndarray) -> None:
         """Re-label every entry's component from canonical labels
         (entries are intra-component: ``canon[lo]`` is the bucket)."""

@@ -641,6 +641,110 @@ class StreamEngine:
         )
 
     # ------------------------------------------------------------------
+    # durable state (repro.stream.persist / DESIGN.md §13.4)
+    # ------------------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """The engine's complete durable state as a flat numpy pytree.
+
+        Everything incremental correctness depends on is here: the forest
+        store (full-capacity columns + live count/tombstones), the
+        replacement-edge reservoir, the gid counter, the canonical labels
+        behind the published snapshot, lossy/unhealed certification
+        state, the packability conjunction and the adaptive-capacity
+        position. Shapes are fixed by the engine configuration, so the
+        tree restores into any engine constructed with the same
+        ``(n, batch_capacity, reservoir_*)`` — ``config`` fingerprints
+        that and :meth:`restore_state` rejects mismatches loudly.
+        """
+        recent = np.full(8, -1, np.int64)
+        recent[: len(self._recent)] = self._recent[-8:]
+        snap = self.snapshots.acquire()
+        state = {
+            "config": np.asarray(
+                [
+                    self.n,
+                    self.batch_capacity,
+                    self.forest_capacity,
+                    int(self.exact_deletes),
+                    self._reservoir.capacity,
+                    self._reservoir.per_component,
+                ],
+                np.int64,
+            ),
+            "lo": self._lo.copy(),
+            "hi": self._hi.copy(),
+            "w": self._w.copy(),
+            "gid": self._gid.copy(),
+            "dead": self._dead.copy(),
+            "count": np.int64(self._count),
+            "n_dead": np.int64(self._n_dead),
+            "weight": np.float64(self._weight),
+            "next_gid": np.int64(self._next_gid),
+            "version": np.int64(self._version),
+            "packable": np.bool_(self._packable),
+            "cap_cur": np.int64(self._cap_cur),
+            "recent": recent,
+            "lossy": self._lossy.copy(),
+            "canon": self._canon.copy(),
+            "unhealed": np.int64(self._unhealed),
+            "stale": np.bool_(snap.stale),
+        }
+        for k, v in self._reservoir.state_dict().items():
+            state[f"reservoir/{k}"] = v
+        return state
+
+    def restore_state(self, state: dict) -> None:
+        """Inverse of :meth:`state_dict`: adopt a saved engine state.
+
+        Rebuilds the live index and the reservoir's key index, then
+        publishes a snapshot at the saved version — queries resume
+        against exactly the forest the saved engine was serving
+        (bit-identical weight, gid set and canonical labels).
+        """
+        cfg = np.asarray(state["config"], np.int64)
+        want = [
+            self.n,
+            self.batch_capacity,
+            self.forest_capacity,
+            int(self.exact_deletes),
+            self._reservoir.capacity,
+            self._reservoir.per_component,
+        ]
+        if list(cfg) != want:
+            raise ValueError(
+                f"checkpoint config {list(map(int, cfg))} does not match "
+                f"this engine's config {want}; construct the engine with "
+                "the same (n, batch_capacity, exact_deletes, reservoir_*)"
+            )
+        self._lo = np.asarray(state["lo"], np.int32).copy()
+        self._hi = np.asarray(state["hi"], np.int32).copy()
+        self._w = np.asarray(state["w"], np.float32).copy()
+        self._gid = np.asarray(state["gid"], np.int32).copy()
+        self._dead = np.asarray(state["dead"], bool).copy()
+        self._count = int(state["count"])
+        self._n_dead = int(state["n_dead"])
+        self._weight = float(state["weight"])
+        self._next_gid = int(state["next_gid"])
+        self._version = int(state["version"])
+        self._packable = bool(state["packable"])
+        self._cap_cur = int(state["cap_cur"])
+        recent = np.asarray(state["recent"], np.int64)
+        self._recent = [int(x) for x in recent if x >= 0]
+        self._lossy = np.asarray(state["lossy"], bool).copy()
+        self._canon = np.asarray(state["canon"], np.int32).copy()
+        self._unhealed = int(state["unhealed"])
+        self._reservoir.restore_state(
+            {
+                k.split("/", 1)[1]: v
+                for k, v in state.items()
+                if k.startswith("reservoir/")
+            }
+        )
+        self._publish(stale=bool(state["stale"]), parent=self._canon)
+        self._refresh_live_index()
+
+    # ------------------------------------------------------------------
     # internals
     # ------------------------------------------------------------------
 

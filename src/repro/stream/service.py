@@ -17,7 +17,9 @@ Two entry styles:
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+import threading
+from collections import OrderedDict
+from typing import Dict, List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +44,23 @@ def _answer_fused(parent, comp_size, u, v):
     return pu == pv, pu, comp_size[u]
 
 
+class BatchAnswer(NamedTuple):
+    """One fused batch's answers plus the snapshot they were pinned to.
+
+    The serving tier needs the *coordinates* of every answer — which
+    published version it reflects, whether that version was stale and how
+    many deletions were unhealed — so responses can carry them on the
+    wire (``serve/v1``). ``snapshot`` is the exact immutable
+    :class:`~repro.stream.snapshot.Snapshot` the whole batch was answered
+    from (one ``acquire()`` per batch, never per query).
+    """
+
+    connected: np.ndarray  # bool [k]
+    component: np.ndarray  # int32 [k]: canonical component label of u[i]
+    size: np.ndarray  # int32 [k]: component size of u[i]
+    snapshot: Snapshot
+
+
 class QueryService:
     """Answer connectivity queries from the latest published snapshot."""
 
@@ -55,18 +74,24 @@ class QueryService:
 
     def connected(self, u, v) -> np.ndarray:
         """bool [k]: are u[i] and v[i] in the same component?"""
-        conn, _, _ = self._run(u, v)
+        conn, _, _, _ = self._run(u, v)
         return conn
 
     def component_id(self, u) -> np.ndarray:
         """int32 [k]: canonical component label of each u[i]."""
-        _, comp, _ = self._run(u, u)
+        _, comp, _, _ = self._run(u, u)
         return comp
 
     def component_size(self, u) -> np.ndarray:
         """int32 [k]: size of the component containing each u[i]."""
-        _, _, size = self._run(u, u)
+        _, _, size, _ = self._run(u, u)
         return size
+
+    def answer(self, u, v) -> BatchAnswer:
+        """All three answer columns *and* the pinned snapshot, one fused
+        call — the serving-tier entry (``repro.serve.server``)."""
+        conn, comp, size, snap = self._run(u, v)
+        return BatchAnswer(conn, comp, size, snap)
 
     def forest_weight(self) -> float:
         return self.store.acquire().weight
@@ -76,7 +101,7 @@ class QueryService:
 
     # -- internals ---------------------------------------------------------
 
-    def _run(self, u, v) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def _run(self, u, v) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Snapshot]:
         from repro import obs  # leaf package; import here keeps service light
 
         with obs.span("stream.query"):
@@ -90,7 +115,7 @@ class QueryService:
             k = len(u)
             if k == 0:
                 z = np.zeros(0, np.int32)
-                return np.zeros(0, bool), z, z
+                return np.zeros(0, bool), z, z, snap
             if k > self.max_batch:
                 raise ValueError(
                     f"query batch {k} exceeds max_batch={self.max_batch}"
@@ -112,6 +137,7 @@ class QueryService:
                 np.asarray(conn)[:k],
                 np.asarray(comp)[:k],
                 np.asarray(size)[:k],
+                snap,
             )
 
 
@@ -121,8 +147,18 @@ class MicroBatcher:
     ``ask_connected(u, v)`` returns an opaque ticket; ``flush()`` answers
     every queued query against a *single* snapshot version and returns the
     list of results in ticket order. Auto-flushes when the queue reaches
-    ``max_queue``; asking again after a flush starts a new window and
-    invalidates older tickets (``result`` raises ``KeyError`` on them).
+    ``max_queue``; asking again after a flush starts a new window. Results
+    of the last ``retain_windows`` flushed windows (default 1 — exactly
+    the just-flushed window, the historical behavior) stay redeemable via
+    ``result``; tickets from windows past the retention horizon raise
+    ``KeyError`` instead of ever serving a wrong answer.
+
+    Thread-safe: ``ask_connected`` / ``flush`` / ``result`` may be called
+    concurrently from any number of threads (one re-entrant lock guards
+    the window state; the fused device call runs under it, so two racing
+    flushes never double-answer a window). A multi-threaded frontend
+    should raise ``retain_windows`` so a thread that asked right before
+    another thread's flush can still redeem its ticket.
 
     When ``repro.obs`` metrics mode is on, the batcher reports its
     admission state (DESIGN.md §11): ``stream.batcher.queue_depth``
@@ -133,54 +169,74 @@ class MicroBatcher:
     (counters). The loadgen SLO report surfaces them.
     """
 
-    def __init__(self, service: QueryService, max_queue: int = 4096):
+    def __init__(self, service: QueryService, max_queue: int = 4096, *,
+                 retain_windows: int = 1):
+        if retain_windows < 1:
+            raise ValueError("retain_windows must be >= 1")
         self.service = service
         self.max_queue = int(max_queue)
+        self.retain_windows = int(retain_windows)
+        self._lock = threading.RLock()
         self._window = 0
         self._pairs: List[Tuple[int, int]] = []
         self._results: List[bool] | None = None
+        #: window id -> results of already-flushed windows (bounded LRU)
+        self._done: "OrderedDict[int, List[bool]]" = OrderedDict()
 
     def ask_connected(self, u: int, v: int) -> Tuple[int, int]:
         from repro import obs
 
-        if self._results is not None:  # start a new window
-            self._window += 1
-            self._pairs, self._results = [], None
-        self._pairs.append((int(u), int(v)))
-        ticket = (self._window, len(self._pairs) - 1)
-        if obs.metrics_active():
-            obs.gauge("stream.batcher.queue_depth").set(len(self._pairs))
-        if len(self._pairs) >= self.max_queue:
+        with self._lock:
+            if self._results is not None:  # start a new window
+                self._window += 1
+                self._pairs, self._results = [], None
+            self._pairs.append((int(u), int(v)))
+            ticket = (self._window, len(self._pairs) - 1)
             if obs.metrics_active():
-                obs.counter("stream.batcher.overflow").inc()
-            self.flush()
-        return ticket
+                obs.gauge("stream.batcher.queue_depth").set(len(self._pairs))
+            if len(self._pairs) >= self.max_queue:
+                if obs.metrics_active():
+                    obs.counter("stream.batcher.overflow").inc()
+                self.flush()
+            return ticket
 
     def flush(self) -> List[bool]:
         from repro import obs
 
-        if self._results is not None:
+        with self._lock:
+            if self._results is not None:
+                return self._results
+            if not self._pairs:
+                self._results = []
+            else:
+                arr = np.asarray(self._pairs, np.int32)
+                conn = self.service.connected(arr[:, 0], arr[:, 1])
+                self._results = [bool(x) for x in conn]
+            self._done[self._window] = self._results
+            while len(self._done) > self.retain_windows:
+                self._done.popitem(last=False)
+            if obs.metrics_active() and self._results:
+                obs.counter("stream.batcher.flush").inc()
+                obs.counter("stream.batcher.flushed_queries").inc(
+                    len(self._results)
+                )
+                obs.gauge("stream.batcher.queue_depth").set(0)
             return self._results
-        if not self._pairs:
-            self._results = []
-            return self._results
-        arr = np.asarray(self._pairs, np.int32)
-        conn = self.service.connected(arr[:, 0], arr[:, 1])
-        self._results = [bool(x) for x in conn]
-        if obs.metrics_active():
-            obs.counter("stream.batcher.flush").inc()
-            obs.counter("stream.batcher.flushed_queries").inc(len(self._results))
-            obs.gauge("stream.batcher.queue_depth").set(0)
-        return self._results
 
     def result(self, ticket: Tuple[int, int]) -> bool:
-        """Result for a ticket; raises if its window has been superseded."""
+        """Result for a ticket; raises ``KeyError`` once its window has
+        aged past the retention horizon."""
         window, idx = ticket
-        if window != self._window:
-            raise KeyError(
-                f"ticket from window {window} is stale (current window "
-                f"{self._window}); results are only held for one window"
-            )
-        if self._results is None:
-            self.flush()
-        return self._results[idx]
+        with self._lock:
+            if window == self._window:
+                if self._results is None:
+                    self.flush()
+                return self._results[idx]
+            done = self._done.get(window)
+            if done is None:
+                raise KeyError(
+                    f"ticket from window {window} is stale (current window "
+                    f"{self._window}, retaining {self.retain_windows} "
+                    f"flushed windows)"
+                )
+            return done[idx]

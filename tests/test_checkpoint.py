@@ -7,6 +7,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import (
     latest_step,
@@ -85,3 +86,87 @@ def test_elastic_restore_different_device_count(tmp_path):
             capture_output=True, text=True, env=env, timeout=240, cwd=".",
         )
         assert out.returncode == 0, out.stderr
+
+
+# ---------------------------------------------------------------------------
+# stream-engine durable restart (repro.stream.persist, DESIGN.md §13.4)
+# ---------------------------------------------------------------------------
+
+
+def _churned_engine(n=96, seed=3):
+    """An engine with real history: inserts, exact deletions (reservoir
+    promotions), and a live replacement reservoir."""
+    from repro.stream.engine import StreamEngine
+
+    rng = np.random.default_rng(seed)
+    eng = StreamEngine(
+        n, batch_capacity=128,
+        reservoir_capacity=4096, reservoir_per_component=4096,
+    )
+    for _ in range(5):
+        m = 48
+        u, v = rng.integers(0, n, m), rng.integers(0, n, m)
+        w = rng.integers(1, 99, m).astype(np.float64)
+        eng.insert_batch(u, v, w)
+    flo, fhi, _, _ = eng.forest_edges()
+    pick = rng.choice(len(flo), size=6, replace=False)
+    eng.delete_batch(flo[pick], fhi[pick])
+    return eng, rng
+
+
+def test_stream_persist_exact_resume(tmp_path):
+    """save_stream → fresh engine → restore_stream must resume
+    bit-identical: forest weight, MSF gid set, canonical labels,
+    reservoir contents, and — the real bar — identical results for
+    identical subsequent updates."""
+    from repro.stream import persist
+    from repro.stream.engine import StreamEngine
+
+    eng, rng = _churned_engine()
+    step = persist.save_stream(str(tmp_path), eng)
+    assert step == eng.version
+    assert persist.latest_stream_step(str(tmp_path)) == step
+
+    eng2 = StreamEngine(
+        96, batch_capacity=128,
+        reservoir_capacity=4096, reservoir_per_component=4096,
+    )
+    assert persist.restore_stream(str(tmp_path), eng2) == eng.version
+    assert eng2.version == eng.version
+    assert eng2.weight == eng.weight  # bit-identical, not approx
+    assert set(eng2.forest_gids().tolist()) == set(eng.forest_gids().tolist())
+    np.testing.assert_array_equal(
+        np.asarray(eng2.snapshots.acquire().parent),
+        np.asarray(eng.snapshots.acquire().parent),
+    )
+    assert eng2.reservoir_size == eng.reservoir_size
+    assert eng2.unhealed == eng.unhealed
+
+    # identical future ops → identical trajectories (gid line resumed)
+    n = 96
+    for _ in range(3):
+        m = 32
+        u, v = rng.integers(0, n, m), rng.integers(0, n, m)
+        w = rng.integers(1, 99, m).astype(np.float64)
+        s1 = eng.insert_batch(u, v, w)
+        s2 = eng2.insert_batch(u, v, w)
+        assert s1.weight == s2.weight and s1.version == s2.version
+        assert s1.n_new == s2.n_new and s1.n_revived == s2.n_revived
+    flo, fhi, _, _ = eng.forest_edges()
+    d1 = eng.delete_batch(flo[:3], fhi[:3])
+    d2 = eng2.delete_batch(flo[:3], fhi[:3])
+    assert d1.n_deleted == d2.n_deleted
+    assert d1.n_replacements == d2.n_replacements
+    assert eng.weight == eng2.weight
+    assert set(eng.forest_gids().tolist()) == set(eng2.forest_gids().tolist())
+
+
+def test_stream_persist_async_and_latest(tmp_path):
+    from repro.stream import persist
+
+    eng, _ = _churned_engine(seed=9)
+    persist.save_stream(str(tmp_path), eng, async_save=True)
+    persist.wait_for_saves()
+    assert persist.latest_stream_step(str(tmp_path)) == eng.version
+    with pytest.raises(FileNotFoundError):
+        persist.restore_stream(str(tmp_path / "empty"), eng)

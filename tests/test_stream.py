@@ -645,11 +645,82 @@ def test_microbatcher_single_snapshot_window():
     res = mb.flush()
     assert res == [True, False, True]
     assert mb.result(t1) and not mb.result(t2) and mb.result(t3)
-    # a new window invalidates old tickets instead of serving wrong answers
+    # the just-flushed window stays redeemable while the next one opens
+    # (retain_windows=1): a ticket's answer stays correct, never wrong
     t4 = mb.ask_connected(0, 1)
+    assert mb.result(t1) and mb.result(t4)
+    # but once a window ages past the retention horizon it is a
+    # KeyError instead of ever serving a stale-window answer
+    t5 = mb.ask_connected(0, 1)  # third window opens
+    mb.flush()  # retain_windows=1: only this flush stays redeemable
     with pytest.raises(KeyError):
         mb.result(t1)
-    assert mb.result(t4)
+    with pytest.raises(KeyError):
+        mb.result(t4)
+    assert mb.result(t5)
+
+
+def test_microbatcher_concurrent_ask_flush():
+    """Threads racing ask_connected against flushes must never lose or
+    double-answer a ticket: every ticket redeems exactly once with the
+    ground-truth answer, and the queue-depth gauge lands at zero."""
+    import threading
+
+    from repro import obs
+
+    n = 64
+    eng = StreamingMSF(n, batch_capacity=128)
+    rng = np.random.default_rng(17)
+    u = rng.integers(0, n, 96)
+    v = rng.integers(0, n, 96)
+    w = rng.integers(1, 99, 96).astype(np.float64)
+    eng.insert_batch(u, v, w)
+    svc = QueryService(eng.snapshots)
+    truth = {}  # static graph: one recompute is the oracle
+    mb = MicroBatcher(svc, max_queue=8, retain_windows=256)
+
+    errors: list = []
+    results: dict = {}
+    lock = threading.Lock()
+
+    def worker(seed: int) -> None:
+        wrng = np.random.default_rng(seed)
+        try:
+            mine = []
+            for _ in range(100):
+                qu = int(wrng.integers(0, n))
+                qv = int(wrng.integers(0, n))
+                mine.append(((qu, qv), mb.ask_connected(qu, qv)))
+                if wrng.random() < 0.1:
+                    mb.flush()
+            mb.flush()
+            for (qu, qv), ticket in mine:
+                got = mb.result(ticket)  # exactly-once redemption
+                with lock:
+                    results[ticket] = ((qu, qv), got)
+        except Exception as e:  # pragma: no cover - surfaced below
+            errors.append(e)
+
+    obs.enable("metrics")
+    try:
+        threads = [threading.Thread(target=worker, args=(1000 + i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors
+        assert len(results) == 400  # no lost, no double-answered tickets
+        pairs = np.array([pair for pair, _ in results.values()])
+        want = svc.connected(pairs[:, 0], pairs[:, 1])
+        got = np.array([ans for _, ans in results.values()])
+        assert np.array_equal(got, want)
+        depth = obs.metrics_snapshot()["gauges"].get(
+            "stream.batcher.queue_depth", 0.0
+        )
+        assert depth == 0.0  # final flush left nothing admitted
+    finally:
+        obs.disable()
 
 
 def test_stream_coarsen_recompute_matches_flat_engine():

@@ -1,0 +1,140 @@
+"""CI gate: validate an ``slo-report/v1`` JSON (and optionally a
+metrics snapshot) emitted by ``repro.launch.loadgen``.
+
+Usage::
+
+    python tools/check_slo_report.py SLO_REPORT.json [--tcp]
+        [--metrics METRICS.json]
+
+Asserts the report parses, carries the ``slo-report/v1`` schema with
+every block the loadgen promises (env, config, queries, latency_ms,
+writer, slo), that the counts are internally consistent (answered +
+dropped [+ rejected/errors] never exceeds offered; latency count equals
+answered), and that the SLO verdict matches its failure list. With
+``--tcp`` the report must be a ``--target`` run: a ``server`` block
+with end-of-run status and ``serve.*`` metrics, a positive served-query
+count, and a writer that actually applied wire writes. ``--metrics``
+additionally validates a ``repro.obs`` metrics snapshot JSON (the
+``--metrics-out`` artifact of ``serve_graph --serve``) — counters /
+gauges / histograms with the summary fields the registry promises.
+
+Exit code 0 on success; a one-line reason on stderr otherwise. This is
+what keeps the uploaded SLO_*.json artifacts honest — a refactor that
+silently empties the report fails CI here, not in a dashboard weeks
+later.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = "slo-report/v1"
+_HIST_FIELDS = ("count", "sum", "min", "max", "p50", "p95", "p99")
+
+
+def _load(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f), None
+    except (OSError, ValueError) as e:
+        return None, f"{path}: cannot parse: {e}"
+
+
+def check_report(path: str, *, tcp: bool = False) -> str | None:
+    """Return None when the report is valid, else the failure reason."""
+    doc, err = _load(path)
+    if err:
+        return err
+    if doc.get("schema") != SCHEMA:
+        return f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}"
+    for block in ("env", "config", "queries", "latency_ms", "writer", "slo"):
+        if not isinstance(doc.get(block), dict):
+            return f"{path}: missing block {block!r}"
+    q = doc["queries"]
+    for field in ("offered", "answered", "dropped", "timeouts"):
+        if not isinstance(q.get(field), int) or q[field] < 0:
+            return f"{path}: queries.{field} must be a non-negative int"
+    accounted = (q["answered"] + q["dropped"]
+                 + q.get("rejected", 0) + q.get("errors", 0))
+    if accounted > q["offered"]:
+        return (f"{path}: answered+dropped+rejected+errors {accounted} "
+                f"> offered {q['offered']}")
+    lat = doc["latency_ms"]
+    for field in ("p50", "p95", "p99", "mean", "count"):
+        if not isinstance(lat.get(field), (int, float)) or lat[field] < 0:
+            return f"{path}: latency_ms.{field} must be a non-negative number"
+    if lat["count"] != q["answered"]:
+        return (f"{path}: latency_ms.count {lat['count']} != "
+                f"queries.answered {q['answered']}")
+    if lat["p50"] > lat["p99"] + 1e-9:
+        return f"{path}: p50 {lat['p50']} > p99 {lat['p99']}"
+    slo = doc["slo"]
+    if not isinstance(slo.get("failures"), list):
+        return f"{path}: slo.failures must be a list"
+    if bool(slo.get("passed")) != (not slo["failures"]):
+        return f"{path}: slo.passed inconsistent with slo.failures"
+    if tcp:
+        srv = doc.get("server")
+        if not isinstance(srv, dict):
+            return f"{path}: --tcp report has no server block"
+        if not srv.get("target", "").startswith("tcp://"):
+            return f"{path}: server.target {srv.get('target')!r} not tcp://"
+        counters = srv.get("metrics", {}).get("counters", {})
+        if counters.get("serve.queries", 0) <= 0:
+            return f"{path}: server served no queries (serve.queries)"
+        if counters.get("serve.writes", 0) <= 0:
+            return f"{path}: server applied no writes (serve.writes)"
+        if doc["writer"].get("updates", 0) <= 0:
+            return f"{path}: wire writer applied no update batches"
+        status = srv.get("status", {})
+        if status.get("status") not in ("serving", "draining"):
+            return f"{path}: server.status.status {status.get('status')!r}"
+    elif "batcher" not in doc:
+        return f"{path}: in-process report has no batcher block"
+    return None
+
+
+def check_metrics(path: str) -> str | None:
+    """Validate a ``repro.obs`` metrics snapshot JSON."""
+    doc, err = _load(path)
+    if err:
+        return err
+    for block in ("counters", "gauges", "histograms"):
+        if not isinstance(doc.get(block), dict):
+            return f"{path}: missing block {block!r}"
+    for name, val in doc["counters"].items():
+        if not isinstance(val, int) or val < 0:
+            return f"{path}: counter {name!r} must be a non-negative int"
+    for name, s in doc["histograms"].items():
+        if not isinstance(s, dict):
+            return f"{path}: histogram {name!r} is not a summary dict"
+        missing = [f for f in _HIST_FIELDS if f not in s]
+        if missing:
+            return f"{path}: histogram {name!r} missing {missing}"
+    if not any(k.startswith("serve.") for k in doc["counters"]):
+        return f"{path}: no serve.* counters — not a serving-tier snapshot"
+    return None
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="check_slo_report")
+    ap.add_argument("report")
+    ap.add_argument("--tcp", action="store_true",
+                    help="require the --target run shape (server block)")
+    ap.add_argument("--metrics", default=None,
+                    help="also validate this obs metrics snapshot JSON")
+    args = ap.parse_args(argv)
+    reason = check_report(args.report, tcp=args.tcp)
+    if reason is None and args.metrics:
+        reason = check_metrics(args.metrics)
+    if reason is not None:
+        print(reason, file=sys.stderr)
+        return 1
+    print(f"{args.report}: OK"
+          + (f" (+ {args.metrics})" if args.metrics else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
